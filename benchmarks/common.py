@@ -1,0 +1,51 @@
+"""Shared benchmark helpers: result rows + CSV/markdown emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def emit(name: str, rows: List[Dict], keys=None):
+    """Print a compact table and save JSON under artifacts/bench/."""
+    os.makedirs(os.path.join(ART_DIR, "bench"), exist_ok=True)
+    path = os.path.join(ART_DIR, "bench", name + ".json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    if rows:
+        keys = keys or list(rows[0].keys())
+        print(f"\n== {name} ==")
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(_fmt(r.get(k)) for k in keys))
+    return path
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def load_dryrun_artifacts(mesh: str = "single") -> List[Dict]:
+    d = os.path.join(ART_DIR, "dryrun")
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for name in sorted(os.listdir(d)):
+        if name.endswith(f"__{mesh}.json"):
+            with open(os.path.join(d, name)) as f:
+                out.append(json.load(f))
+    return out
+
+
+class timed:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

@@ -1,0 +1,54 @@
+"""Fig. 11 reproduction: two-level DSE (PSO) exploration traces for
+ResNet-18/-34 and AlexNet on KU115 and ZC706 (batch unrestricted).
+
+Paper: converges within the first ~10 of 20 iterations; best
+throughputs 1642.6 / 1640.6 / 1501.2 GOP/s (KU115) and 258.9 / 236.1 /
+201.6 GOP/s (ZC706).
+"""
+from __future__ import annotations
+
+from repro.core.dse.engine import explore_fpga
+from repro.core.hardware import KU115, ZC706
+from repro.core.workload import alexnet, resnet18, resnet34
+
+from benchmarks.common import emit
+
+PAPER = {
+    ("resnet18", "KU115"): 1642.6, ("resnet34", "KU115"): 1640.6,
+    ("alexnet", "KU115"): 1501.2, ("resnet18", "ZC706"): 258.9,
+    ("resnet34", "ZC706"): 236.1, ("alexnet", "ZC706"): 201.6,
+}
+
+
+def run(n_particles: int = 16, n_iters: int = 20):
+    rows = []
+    for nm, fn in (("resnet18", resnet18), ("resnet34", resnet34),
+                   ("alexnet", alexnet)):
+        for spec in (KU115, ZC706):
+            res = explore_fpga(fn(224), spec, n_particles=n_particles,
+                               n_iters=n_iters, max_batch=64)
+            hist = res.gops_trace
+            target = 0.99 * hist[-1]
+            conv_iter = next(i for i, v in enumerate(hist) if v >= target)
+            got = res.best_design.gops()
+            exp = PAPER[(nm, spec.name)]
+            rows.append({
+                "net": nm, "board": spec.name, "gops": got,
+                "paper_gops": exp, "ratio": got / exp,
+                "batch": res.best_design.batch, "sp": res.best_design.sp,
+                "converged_iter": conv_iter,
+                "trace": [round(v, 1) for v in hist],
+            })
+    emit("fig11_dse_convergence", rows,
+         keys=["net", "board", "gops", "paper_gops", "ratio", "batch",
+               "sp", "converged_iter"])
+    conv_ok = all(r["converged_iter"] <= 10 for r in rows)
+    within = [r for r in rows if 0.75 <= r["ratio"] <= 1.35]
+    print(f"[fig11] all converge <=10 iters: {conv_ok}; "
+          f"{len(within)}/6 within 0.75-1.35x of paper GOP/s")
+    return {"converged_le_10": conv_ok, "within_band": len(within),
+            "pass": conv_ok and len(within) >= 5}
+
+
+if __name__ == "__main__":
+    run()

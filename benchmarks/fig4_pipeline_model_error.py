@@ -1,0 +1,50 @@
+"""Fig. 4 reproduction: pipeline (paradigm 1) analytic model vs the
+cycle-approximate event simulator (the board stand-in).
+
+Paper: avg 1.15% error between estimated and board-level performance
+across AlexNet/ZF/VGG16/YOLO at 16- and 8-bit on ZC706 + KU115.
+"""
+from __future__ import annotations
+
+from repro.core.analytical.pipeline import pipeline_performance
+from repro.core.hardware import KU115, ZC706
+from repro.core.workload import alexnet, vgg16_conv, yolo_tiny, zfnet
+from repro.sim.simulator import simulate_pipeline
+
+from benchmarks.common import emit
+
+# (a) ZC706: N1-N3 = AlexNet/ZF/YOLO @16b, N4-N6 same @8b
+# (b) KU115: N1-N4 = AlexNet/ZF/VGG16/YOLO @16b, N5-N8 same @8b
+CASES = []
+for bits in (16, 8):
+    for nm, fn, sz in (("alexnet", alexnet, 224), ("zf", zfnet, 224),
+                       ("yolo", yolo_tiny, 448)):
+        CASES.append(("ZC706", ZC706, nm, fn, sz, bits))
+    for nm, fn, sz in (("alexnet", alexnet, 224), ("zf", zfnet, 224),
+                       ("vgg16", vgg16_conv, 224), ("yolo", yolo_tiny, 448)):
+        CASES.append(("KU115", KU115, nm, fn, sz, bits))
+
+
+def run(batch: int = 2):
+    rows = []
+    for board, spec, nm, fn, sz, bits in CASES:
+        d = pipeline_performance(fn(sz), spec, batch=batch,
+                                 wbits=bits, abits=bits)
+        if not d.feasible:
+            continue
+        s = simulate_pipeline(d, spec)
+        err = (d.gops() - s.gops) / s.gops * 100
+        rows.append({"board": board, "net": nm, "bits": bits,
+                     "analytic_gops": d.gops(), "sim_gops": s.gops,
+                     "err_pct": err})
+    avg = sum(abs(r["err_pct"]) for r in rows) / len(rows)
+    rows.append({"board": "AVG", "net": "-", "bits": "-",
+                 "analytic_gops": "-", "sim_gops": "-", "err_pct": avg})
+    emit("fig4_pipeline_model_error", rows)
+    print(f"[fig4] avg |err| = {avg:.2f}%  (paper: 1.15%)")
+    return {"avg_err_pct": avg, "paper_err_pct": 1.15,
+            "pass": avg <= 3.0}
+
+
+if __name__ == "__main__":
+    run()

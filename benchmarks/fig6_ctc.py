@@ -1,0 +1,27 @@
+"""Fig. 6 reproduction: CTC (computation-to-communication) distribution
+of VGG-16 CONV layers across 12 input resolutions.
+
+Paper: CTC medians rise ~256x from 32x32 to 512x512 inputs.
+"""
+from __future__ import annotations
+
+from repro.core.workload import INPUT_SIZE_CASES, ctc_stats, vgg16_conv
+
+from benchmarks.common import emit
+
+
+def run():
+    rows = []
+    for sz in INPUT_SIZE_CASES:
+        stats = ctc_stats(vgg16_conv(sz))
+        rows.append({"input": sz, **stats})
+    growth = rows[-1]["median"] / rows[0]["median"]
+    emit("fig6_ctc", rows)
+    print(f"[fig6] CTC median growth 32->512: {growth:.1f}x "
+          f"(paper: ~256x)")
+    return {"median_growth": growth, "paper_growth": 256.0,
+            "pass": 128.0 <= growth <= 512.0}
+
+
+if __name__ == "__main__":
+    run()

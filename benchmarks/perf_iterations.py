@@ -1,0 +1,230 @@
+"""§Perf hillclimb: hypothesis -> change -> re-lower -> validate, on the
+three selected cells (worst roofline fraction / most collective-bound /
+most representative of the paper's technique).
+
+Each variant is a full dry-run lowering (same machinery as the baseline
+sweep); the log records the napkin-math prediction and whether the
+measured artifact confirmed it. Run AFTER the baseline sweep:
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import json
+
+from benchmarks.common import ART_DIR, emit
+
+# Cells: (arch, shape, why picked)
+CELLS = [
+    ("mixtral-8x22b", "train_4k",
+     "most representative: MoE + EP + the DSE's own recipe space; "
+     "collective-heavy baseline"),
+    ("qwen2-moe-a2.7b", "prefill_32k",
+     "worst roofline fraction (useful ratio 3e-4): einsum dispatch "
+     "at T=1M tokens, 60 experts"),
+    ("minicpm-2b", "train_4k",
+     "most collective-bound dense cell (coll/compute ~6x); prime vocab "
+     "122753 defeats lm_head sharding, 36 heads defeat head-TP"),
+]
+
+
+def _pad_vocab(mult: int = 256):
+    def tf(cfg):
+        v = -(-cfg.vocab_size // mult) * mult
+        return cfg.replace(vocab_size=v)
+    return tf
+
+
+def _capshard_recipe(kind: str):
+    """Shard the MoE capacity dim over `data`: the dispatch einsum's
+    token-contraction then produces data-sharded expert buffers
+    (reduce-scatter semantics) instead of replicated ones (all-reduce),
+    and the expert GEMMs shard over data x model."""
+    from repro.dist.sharding import IS_RECIPE, WS_RECIPE
+    base = IS_RECIPE if kind == "train" else WS_RECIPE
+    return base.with_rules(capacity=("data",)).replace_name(
+        base.name + "+capshard")
+
+
+def _seqres_recipe():
+    """Megatron-SP: keep the residual stream sequence-sharded over
+    `model` between layers — the per-layer TP all-reduces become
+    reduce-scatter + all-gather halves around each block."""
+    from repro.dist.sharding import IS_SEQ_RECIPE
+    return IS_SEQ_RECIPE.with_rules(seq="model").replace_name(
+        "is-seqattn+seqres")
+
+
+# Per-cell variant ladder: (name, hypothesis, lower_cell kwargs)
+VARIANTS = {
+    ("mixtral-8x22b", "train_4k"): [
+        ("moe_chunk2048",
+         "GShard token groups Tc=2048: dispatch/combine einsums are "
+         "O(T*E*C*d) with C~K*T/E=16k; per-group C=640 cuts them ~25x. "
+         "Predict compute 92.8s -> ~15s, memory & collectives down "
+         "several-fold (no (T,E,16k) tensors).",
+         dict(moe_chunk=2048)),
+        ("moe_chunk512",
+         "Smaller groups (Tc=512, C=160): dispatch cost down another 4x "
+         "but more dropping variance; predict small further compute win.",
+         dict(moe_chunk=512)),
+        ("moe_chunk2048_m8",
+         "Halve grad-accum M 16->8 on top of Tc=2048: IS weight "
+         "all-gathers per step halve; predict collective term ~-40%, "
+         "HBM carries x2 (analytic footprint still fits).",
+         dict(moe_chunk=2048, microbatches=8)),
+        ("moe_chunk512_capshard",
+         "Iter 2 (collective-bound, 8 TB all-reduce/chip): the dispatch "
+         "psum over data replicates (E,C,d) buffers on every chip. "
+         "Shard capacity over data -> reduce-scatter semantics + "
+         "data-sharded expert GEMMs. Predict all-reduce bytes ~-8x and "
+         "a further compute shard.",
+         dict(moe_chunk=512, recipe="capshard")),
+    ],
+    ("qwen2-moe-a2.7b", "prefill_32k"): [
+        ("moe_chunk2048",
+         "Tc=2048 at T=1M, E=60: C 87k -> 171, dispatch ~512x cheaper. "
+         "Predict compute 353s -> ~1-2s (expert math + attention left).",
+         dict(moe_chunk=2048)),
+        ("moe_chunk4096",
+         "Tc=4096 (C=342): half the groups, 2x dispatch cost vs Tc=2048 "
+         "but less routing variance; predict compute slightly higher.",
+         dict(moe_chunk=4096)),
+        ("moe_chunk2048_capshard",
+         "Iter 2: same dispatch-psum story as mixtral — capacity over "
+         "data. Predict the 12.1s collective term drops several-fold.",
+         dict(moe_chunk=2048, recipe="capshard")),
+    ],
+    ("minicpm-2b", "train_4k"): [
+        ("vocab_pad",
+         "Pad vocab 122753 -> 122880 (%256==0): lm_head/embed/logits "
+         "shard 16x over model instead of replicating. Predict the "
+         "replicated 2*T*d*V lm_head flops (~10%) shard away and the "
+         "f32 logits buffer leaves the memory term.",
+         dict(cfg_transform=_pad_vocab())),
+        ("vocab_pad_m4",
+         "M 8->4 on top: halve per-step weight all-gather rounds; "
+         "predict collective ~-40%, carries x2 (fits: 2.7B model).",
+         dict(cfg_transform=_pad_vocab(), microbatches=4)),
+        ("vocab_pad_dots",
+         "remat full->dots on top of vocab_pad: no fwd recompute, "
+         "predict compute -25%, memory carries grow (fits).",
+         dict(cfg_transform=_pad_vocab(), remat="dots")),
+        ("vocab_pad_m4_seqres",
+         "Iter 2 (collective-bound, 353 GB all-reduce/chip): "
+         "sequence-shard the residual stream over `model` (Megatron-SP) "
+         "so per-layer TP all-reduces become RS+AG halves. Predict "
+         "all-reduce bytes ~-2x.",
+         dict(cfg_transform=_pad_vocab(), microbatches=4,
+              recipe="seqres")),
+    ],
+}
+
+
+def _analytic_memory_s(art):
+    """TPU-side memory term from the analytic model (the CPU backend's
+    ``bytes_accessed`` is fusion-pessimistic by ~2 orders of magnitude —
+    e.g. mixtral train baseline: 220 s would mean 180 TB/chip/step).
+    Compute and collective terms stay *measured* (HLO op counts are
+    reliable); only the memory term is substituted."""
+    from repro.configs import get_arch, get_shape
+    from repro.core.analytical.tpu_model import ShardPlan, TPUPlan, analyze
+
+    cfg = get_arch(art["arch"])
+    shape = get_shape(art["shape"])
+    attn = "heads" if cfg.n_heads % 16 == 0 and cfg.family != "ssm" \
+        else "seq"
+    df = "IS" if shape.kind == "train" else "WS"
+    sp = ShardPlan(df, attn, 16)
+    plan = TPUPlan(0, sp, sp, art.get("microbatches", 1),
+                   art.get("remat", "full"), 16, 1)
+    return analyze(cfg, shape, plan).memory_s
+
+
+def summarize(art):
+    if art["status"] != "OK":
+        return {"status": art["status"],
+                "err": art.get("error", "")[:80]}
+    r = art["roofline"]
+    mem_an = _analytic_memory_s(art)
+    adj = max(r["compute_s"], r["collective_s"], mem_an)
+    mf = r["model_flops"]
+    frac_adj = (mf / adj) / (256 * 197e12) if adj > 0 else 0.0
+    return {
+        "status": "OK",
+        "compute_s": round(r["compute_s"], 4),
+        "memory_s": round(r["memory_s"], 4),
+        "mem_analytic_s": round(mem_an, 4),
+        "collective_s": round(r["collective_s"], 4),
+        "dominant": r["dominant"],
+        "useful_ratio": round(r["useful_flops_ratio"], 5),
+        "roofline_frac": round(r["roofline_fraction"], 5),
+        "bound_s": round(r["step_time_bound_s"], 4),
+        "adj_bound_s": round(adj, 4),
+        "adj_frac": round(frac_adj, 5),
+    }
+
+
+def run(mesh_name: str = "single"):
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    out_dir = os.path.join(ART_DIR, "perf")
+    os.makedirs(out_dir, exist_ok=True)
+    log = []
+    for arch, shape, why in CELLS:
+        base_path = os.path.join(ART_DIR, "dryrun",
+                                 f"{arch}__{shape}__{mesh_name}.json")
+        with open(base_path) as f:
+            base = json.load(f)
+        best = summarize(base)
+        best_name = "baseline"
+        log.append({"cell": f"{arch}/{shape}", "variant": "baseline",
+                    "hypothesis": f"(picked because: {why})", **best})
+        print(f"\n### {arch} x {shape} — {why}")
+        print(f"  baseline: {best}")
+        for name, hyp, kw in VARIANTS[(arch, shape)]:
+            tag = f"{arch}__{shape}__{mesh_name}__{name}"
+            path = os.path.join(out_dir, tag + ".json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    art = json.load(f)
+            else:
+                kw2 = dict(kw)
+                if kw2.get("recipe") == "capshard":
+                    from repro.configs import get_shape as _gs
+                    kw2["recipe"] = _capshard_recipe(_gs(shape).kind)
+                elif kw2.get("recipe") == "seqres":
+                    kw2["recipe"] = _seqres_recipe()
+                art = lower_cell(arch, shape, mesh, mesh_name,
+                                 variant=name, **kw2)
+                with open(path, "w") as f:
+                    json.dump(art, f, indent=1, default=str)
+            s = summarize(art)
+            verdict = "?"
+            if s["status"] == "OK" and best["status"] == "OK":
+                verdict = ("CONFIRMED"
+                           if s["adj_bound_s"] < best["adj_bound_s"]
+                           else "REFUTED")
+                if s["adj_bound_s"] < best["adj_bound_s"]:
+                    best, best_name = s, name
+            log.append({"cell": f"{arch}/{shape}", "variant": name,
+                        "hypothesis": hyp, "verdict": verdict, **s})
+            print(f"  {name}: {s} -> {verdict}")
+        log.append({"cell": f"{arch}/{shape}", "variant": "<<WINNER>>",
+                    "hypothesis": best_name, **best})
+        print(f"  WINNER: {best_name}: adj bound "
+              f"{best.get('adj_bound_s')}s adj frac "
+              f"{best.get('adj_frac')}")
+    emit("perf_iterations", log,
+         keys=["cell", "variant", "status", "compute_s",
+               "mem_analytic_s", "collective_s", "useful_ratio",
+               "adj_bound_s", "adj_frac", "verdict"])
+    return log
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""§Roofline: the 40-cell baseline table from the dry-run artifacts
+(single-pod mesh), plus the TPU analytic model's prediction per cell
+(§Model-accuracy, the Fig. 4/5 analogue for the TPU domain).
+"""
+from __future__ import annotations
+
+from repro.configs import get_arch, get_shape
+from repro.core.analytical.tpu_model import ShardPlan, TPUPlan, analyze
+
+from benchmarks.common import emit, load_dryrun_artifacts
+
+
+def _default_plan(cfg, shape, m):
+    attn = "heads" if cfg.n_heads % 16 == 0 and cfg.family != "ssm" \
+        else "seq"
+    df = "IS" if shape.kind == "train" else "WS"
+    sp = ShardPlan(df, attn, 16)
+    return TPUPlan(sp=0, front=sp, tail=sp, microbatches=m,
+                   remat="full", dp=16, pods=1)
+
+
+def run(mesh: str = "single"):
+    rows = []
+    for art in load_dryrun_artifacts(mesh):
+        if art["status"] == "SKIP":
+            rows.append({"arch": art["arch"], "shape": art["shape"],
+                         "status": "SKIP", "note": art["reason"][:48]})
+            continue
+        if art["status"] != "OK":
+            rows.append({"arch": art["arch"], "shape": art["shape"],
+                         "status": "FAIL", "note": art["error"][:48]})
+            continue
+        r = art["roofline"]
+        cfg = get_arch(art["arch"])
+        shape = get_shape(art["shape"])
+        plan = _default_plan(cfg, shape, art.get("microbatches", 1))
+        pred = analyze(cfg, shape, plan)
+        rows.append({
+            "arch": art["arch"], "shape": art["shape"], "status": "OK",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "roofline_frac": r["roofline_fraction"],
+            "pred_compute_s": pred.compute_s,
+            "pred_dominant": pred.dominant,
+            "note": "",
+        })
+    emit(f"roofline_table_{mesh}", rows,
+         keys=["arch", "shape", "status", "compute_s", "memory_s",
+               "collective_s", "dominant", "useful_ratio",
+               "roofline_frac"])
+    ok = [r for r in rows if r["status"] == "OK"]
+    if ok:
+        doms = {}
+        for r in ok:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"[roofline/{mesh}] {len(ok)} OK cells; dominant terms: "
+              f"{doms}")
+    return {"cells": len(rows),
+            "ok": len(ok),
+            "fail": sum(r['status'] == 'FAIL' for r in rows),
+            "pass": all(r["status"] != "FAIL" for r in rows)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Benchmark driver: one module per paper table/figure + the TPU-domain
+roofline/model reports. ``python -m benchmarks.run [--quick]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer DSE cases for fig8/9")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig4_pipeline_model_error,
+        fig5_generic_model_error,
+        fig6_ctc,
+        fig8_dsp_efficiency,
+        fig9_resource_split,
+        fig10_scalability,
+        fig11_dse_convergence,
+        roofline_table,
+        tpu_model_error,
+    )
+
+    n_cases = 6 if args.quick else 12
+    benches = [
+        ("fig4", lambda: fig4_pipeline_model_error.run()),
+        ("fig5", lambda: fig5_generic_model_error.run()),
+        ("fig6", lambda: fig6_ctc.run()),
+        ("fig8", lambda: fig8_dsp_efficiency.run(n_cases)),
+        ("fig9", lambda: fig9_resource_split.run(n_cases)),
+        ("fig10", lambda: fig10_scalability.run()),
+        ("fig11", lambda: fig11_dse_convergence.run()),
+        ("roofline_single", lambda: roofline_table.run("single")),
+        ("roofline_multi", lambda: roofline_table.run("multi")),
+        ("tpu_model", lambda: tpu_model_error.run()),
+    ]
+    if args.only:
+        names = set(args.only.split(","))
+        benches = [(n, f) for n, f in benches if n in names]
+
+    results = {}
+    t_all = time.time()
+    for name, fn in benches:
+        t0 = time.time()
+        try:
+            results[name] = fn()
+            results[name]["seconds"] = round(time.time() - t0, 1)
+        except Exception as e:                        # noqa: BLE001
+            results[name] = {"pass": False,
+                             "error": f"{type(e).__name__}: {e}"}
+            import traceback
+            traceback.print_exc()
+
+    print("\n==== SUMMARY ====")
+    ok = True
+    for name, r in results.items():
+        status = "PASS" if r.get("pass") else "FAIL"
+        ok &= bool(r.get("pass"))
+        extra = {k: v for k, v in r.items()
+                 if k not in ("pass",) and not isinstance(v, (list, dict))}
+        print(f"{status:4s} {name:18s} {extra}")
+    print(f"total {time.time() - t_all:.0f}s")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""§Model-accuracy (TPU domain): analytic tpu_model prediction vs the
+compiled dry-run artifact, per cell — the Fig. 4/5 analogue.
+
+The analytic model predicts *useful-work* compute time (model math at
+the chosen sharding); the compiled artifact measures whatever the
+lowering actually emitted. Their ratio is therefore both a model-error
+check AND a waste detector: a large (compiled / predicted) ratio marks a
+cell whose implementation leaves flops on the table (e.g. the einsum
+MoE dispatch) — exactly what the paper's benchmarking step is for.
+"""
+from __future__ import annotations
+
+from repro.configs import get_arch, get_shape
+from repro.core.analytical.tpu_model import ShardPlan, TPUPlan, analyze
+
+from benchmarks.common import emit, load_dryrun_artifacts
+
+
+def run(mesh: str = "single"):
+    rows = []
+    for art in load_dryrun_artifacts(mesh):
+        if art["status"] != "OK":
+            continue
+        cfg = get_arch(art["arch"])
+        shape = get_shape(art["shape"])
+        attn = "heads" if cfg.n_heads % 16 == 0 \
+            and cfg.family != "ssm" else "seq"
+        df = "IS" if shape.kind == "train" else "WS"
+        sp = ShardPlan(df, attn, 16)
+        plan = TPUPlan(0, sp, sp, art.get("microbatches", 1), "full",
+                       16, 1)
+        pred = analyze(cfg, shape, plan)
+        meas = art["roofline"]["compute_s"]
+        ratio = meas / max(pred.compute_s, 1e-12)
+        rows.append({"arch": art["arch"], "shape": art["shape"],
+                     "pred_compute_s": pred.compute_s,
+                     "hlo_compute_s": meas, "hlo_over_pred": ratio})
+    med = sorted(r["hlo_over_pred"] for r in rows)[len(rows) // 2] \
+        if rows else 0
+    emit(f"tpu_model_error_{mesh}", rows)
+    print(f"[tpu-model] {len(rows)} cells; median HLO/analytic compute "
+          f"ratio = {med:.2f} (>1 = backend overhead/waste; large values "
+          f"flag optimization targets)")
+    return {"cells": len(rows), "median_ratio": med, "pass": len(rows) > 0}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Accelerator exploration deep-dive (the paper's §6 experiments, live).
+
+Reproduces the scalability experiment (Fig. 10) and one DSE trace
+(Fig. 11) interactively, then runs the TPU-domain DSE across three
+assigned architectures to show how the same two-level search adapts
+plans per family (dense vs MoE vs SSM).
+
+    PYTHONPATH=src python examples/explore_accelerator.py
+"""
+from repro.configs import get_arch, get_shape
+from repro.core.dse.engine import benchmark_paradigm, explore_fpga
+from repro.core.dse.tpu_engine import explore_tpu
+from repro.core.hardware import KU115
+from repro.core.workload import vgg16_conv
+
+print("== Fig. 10: deeper DNNs (13 -> 38 CONV layers) ==")
+for extra, depth in ((0, 13), (1, 18), (3, 28), (5, 38)):
+    layers = vgg16_conv(224, extra_per_group=extra)
+    row = [f"{depth}L"]
+    for p in (1, 2, 3):
+        r = benchmark_paradigm(layers, KU115, p, batch=1)
+        row.append(f"p{p}={r.gops:7.1f}")
+    print("  " + "  ".join(row))
+
+print("\n== Fig. 11-style DSE trace (VGG16 / KU115) ==")
+res = explore_fpga(vgg16_conv(224), KU115, n_particles=16, n_iters=12)
+for i, (g, sp, b) in enumerate(zip(res.gops_trace, res.sp_trace,
+                                   res.batch_trace)):
+    print(f"  iter {i:2d}: best {g:7.1f} GOP/s  (SP={sp}, batch={b})")
+
+print("\n== TPU DSE across architecture families ==")
+for arch in ("stablelm-12b", "mixtral-8x22b", "mamba2-1.3b"):
+    cfg = get_arch(arch)
+    shape = get_shape("train_4k")
+    t = explore_tpu(cfg, shape, n_particles=10, n_iters=10)
+    a = t.best_analysis
+    print(f"  {arch:16s}: M={t.best_plan.microbatches:2d} "
+          f"front={t.best_plan.front.dataflow}/{t.best_plan.front.attn_mode} "
+          f"dom={a.dominant:12s} roofline~{t.best_fitness:.3f}")

@@ -1,0 +1,40 @@
+"""Quickstart: the full Being-ahead / DNNExplorer flow in one minute.
+
+1. benchmark the two established accelerator paradigms for a DNN,
+2. explore the paper's hybrid paradigm with the two-level DSE,
+3. do the same for a TPU pod: profile an assigned LM architecture,
+   run the TPU DSE over sharding plans, print the predicted roofline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import get_arch, get_shape
+from repro.core.dse.engine import benchmark_paradigm, explore_fpga
+from repro.core.dse.tpu_engine import explore_tpu
+from repro.core.hardware import KU115
+from repro.core.workload import resnet18
+
+print("== step 1-2: FPGA-domain benchmarking (the paper's own flow) ==")
+layers = resnet18(224)
+for p in (1, 2):
+    r = benchmark_paradigm(layers, KU115, p, batch=1)
+    print(f"paradigm {p}: {r.gops:7.1f} GOP/s, DSP efficiency {r.dsp_eff:.2f}")
+
+res = explore_fpga(layers, KU115, n_particles=12, n_iters=12)
+d = res.best_design
+print(f"paradigm 3 (two-level DSE): {d.gops():7.1f} GOP/s "
+      f"(SP={d.sp}, batch={d.batch}) — converged in "
+      f"{next(i for i, v in enumerate(res.gops_trace) if v >= 0.99 * res.gops_trace[-1])}"
+      f" iterations")
+
+print("\n== step 3: the same technique on a TPU-pod (256 x v5e) ==")
+cfg = get_arch("chatglm3-6b")
+shape = get_shape("train_4k")
+t = explore_tpu(cfg, shape, n_particles=10, n_iters=10)
+a = t.best_analysis
+print(f"{cfg.name} x {shape.name}: best plan SP={t.best_plan.sp} "
+      f"M={t.best_plan.microbatches} "
+      f"front={t.best_plan.front.dataflow} tail={t.best_plan.tail.dataflow}")
+print(f"predicted per-chip terms: compute {a.compute_s:.2f}s, "
+      f"memory {a.memory_s:.2f}s, collectives {a.collective_s:.2f}s "
+      f"-> bottleneck: {a.dominant}")
+print(f"predicted roofline fraction: {t.best_fitness:.3f}")

@@ -1,0 +1,15 @@
+from repro.ckpt.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    restore_elastic,
+    save,
+)
+
+__all__ = [
+    "AsyncCheckpointer",
+    "latest_step",
+    "restore",
+    "restore_elastic",
+    "save",
+]

@@ -1,0 +1,153 @@
+"""Sharded checkpoint save/restore with async writes and elastic
+re-shard restore.
+
+Layout: ``<dir>/step_<N>/{manifest.json, <leaf-id>.npy...}`` — one file
+per pytree leaf, names derived from the tree path, so a restore can map
+leaves onto a *different* mesh/sharding (elastic scaling: the DSE
+re-plans the recipe for the surviving chip count and restore places the
+same bytes under the new sharding). A ``_COMPLETE`` marker commits the
+checkpoint atomically: an interrupted write is never restored.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _leaf_files(tree) -> Dict[str, Any]:
+    flat = jax.tree.flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        fname = re.sub(r"[^A-Za-z0-9_.-]+", "_", key).strip("_")
+        out[fname] = (key, leaf)
+    return out
+
+
+def save(directory: str, step: int, tree, extra: Optional[Dict] = None,
+         ) -> str:
+    """Blocking save. Gathers each leaf to host memory and writes it."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for fname, (key, leaf) in _leaf_files(tree).items():
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, fname + ".npy"), arr)
+        manifest["leaves"][fname] = {
+            "path": key, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "_COMPLETE"), "w") as f:
+        f.write("ok")
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name, "_COMPLETE")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like) -> Any:
+    """Restore into the structure (and shardings) of ``like`` — pass a
+    pytree of arrays or ShapeDtypeStructs with `.sharding` set."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    assert os.path.exists(os.path.join(path, "_COMPLETE")), \
+        f"incomplete checkpoint at {path}"
+    files = _leaf_files(like)
+    flat, treedef = jax.tree.flatten_with_path(like)
+    leaves = []
+    for fpath, leaf in flat:
+        key = jax.tree_util.keystr(fpath)
+        fname = re.sub(r"[^A-Za-z0-9_.-]+", "_", key).strip("_")
+        arr = np.load(os.path.join(path, fname + ".npy"))
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and not callable(sharding):
+            leaves.append(jax.device_put(arr, sharding))
+        else:
+            leaves.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, [l for l in leaves])
+
+
+def restore_elastic(directory: str, step: int, like, shardings) -> Any:
+    """Elastic restore: same bytes, new mesh. ``shardings`` is a pytree
+    of NamedShardings for the *new* mesh (from the re-planned recipe)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    assert os.path.exists(os.path.join(path, "_COMPLETE"))
+    flat, treedef = jax.tree.flatten_with_path(like)
+    shard_leaves = jax.tree.leaves(shardings)
+    leaves = []
+    for (fpath, _), sh in zip(flat, shard_leaves):
+        key = jax.tree_util.keystr(fpath)
+        fname = re.sub(r"[^A-Za-z0-9_.-]+", "_", key).strip("_")
+        arr = np.load(os.path.join(path, fname + ".npy"))
+        leaves.append(jax.device_put(arr, sh))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: the train loop hands off host copies
+    and keeps stepping while the previous checkpoint hits disk."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, extra = item
+            try:
+                save(self.directory, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:      # surfaced on next submit/close
+                self._err = e
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for m in
+            (re.fullmatch(r"step_(\d+)", n)
+             for n in os.listdir(self.directory)) if m)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def submit(self, step: int, tree, extra: Optional[Dict] = None):
+        if self._err:
+            raise self._err
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._q.put((step, host_tree, extra))
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join()
+        if self._err:
+            raise self._err

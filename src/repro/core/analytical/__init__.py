@@ -1,0 +1,26 @@
+from repro.core.analytical.pipeline import (
+    PipelineDesign,
+    allocate_compute,
+    allocate_bandwidth,
+    pipeline_performance,
+)
+from repro.core.analytical.generic import (
+    GenericDesign,
+    generic_layer_latency,
+    generic_dse,
+    generic_performance,
+)
+from repro.core.analytical.hybrid import HybridDesign, hybrid_performance
+
+__all__ = [
+    "PipelineDesign",
+    "allocate_compute",
+    "allocate_bandwidth",
+    "pipeline_performance",
+    "GenericDesign",
+    "generic_layer_latency",
+    "generic_dse",
+    "generic_performance",
+    "HybridDesign",
+    "hybrid_performance",
+]

@@ -1,0 +1,131 @@
+"""Paradigm 3 — the paper's novel hybrid architecture (§5.2).
+
+Layers 1..SP run on a dedicated layer-wise pipeline with resource budget
+[DSP_p, BRAM_p, BW_p]; layers SP+1..n run on a generic reusable array
+with the remaining budget. Both share batch size and clock. Steady-state
+throughput is the min of the two sections' rates (they operate
+concurrently on a stream of inputs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from repro.core.analytical.generic import (
+    GenericDesign,
+    generic_dse,
+    generic_dsp_used,
+)
+from repro.core.analytical.pipeline import (
+    PipelineDesign,
+    pipeline_dsp_used,
+    pipeline_performance,
+)
+from repro.core.hardware import FPGASpec
+from repro.core.workload import ConvLayer
+
+
+@dataclass
+class HybridDesign:
+    sp: int
+    batch: int
+    pipeline: Optional[PipelineDesign]
+    generic: Optional[GenericDesign]
+    spec: FPGASpec
+    wbits: int
+    abits: int
+    feasible: bool = True
+
+    def throughput_imgs(self) -> float:
+        rates = []
+        if self.pipeline is not None and self.pipeline.stages:
+            if not self.pipeline.feasible:
+                return 0.0
+            rates.append(self.pipeline.throughput_imgs(self.batch))
+        if self.generic is not None and self.generic.dataflows:
+            if not self.generic.feasible:
+                return 0.0
+            rates.append(self.generic.throughput_imgs(self.batch))
+        return min(rates) if rates else 0.0
+
+    def total_ops(self) -> int:
+        ops = 0
+        if self.pipeline is not None:
+            ops += sum(s.layer.ops for s in self.pipeline.stages)
+        if self.generic is not None:
+            ops += sum(l.ops for l in self.generic.layers)
+        return ops
+
+    def gops(self) -> float:
+        return self.total_ops() * self.throughput_imgs() / 1e9
+
+    def dsp_used(self) -> float:
+        used = 0.0
+        if self.pipeline is not None:
+            used += pipeline_dsp_used(self.pipeline, self.spec)
+        if self.generic is not None and self.generic.dataflows:
+            used += generic_dsp_used(self.generic, self.spec)
+        return used
+
+    def dsp_efficiency(self) -> float:
+        alpha = 2.0 * self.spec.macs_per_dsp(self.wbits)
+        dsp = self.dsp_used()
+        if dsp == 0:
+            return 0.0
+        return self.gops() * 1e9 / (alpha * dsp * self.spec.freq_hz)
+
+    def bram_used(self) -> float:
+        used = 0.0
+        if self.pipeline is not None:
+            used += self.pipeline.bram_bytes()
+        if self.generic is not None and self.generic.dataflows:
+            hw = self.generic.hw
+            used += hw.cap_fbuf + hw.cap_wbuf + hw.cap_abuf
+        return used
+
+
+def hybrid_performance(
+    layers: Sequence[ConvLayer],
+    spec: FPGASpec,
+    sp: int,
+    batch: int = 1,
+    dsp_p: Optional[int] = None,
+    bram_p: Optional[float] = None,
+    bw_p: Optional[float] = None,
+    wbits: int = 16,
+    abits: int = 16,
+) -> HybridDesign:
+    """Evaluate one RAV = [SP, Batch, DSP_p, BRAM_p, BW_p] (level-2 of the
+    DSE runs inside: Algs 1+2 for the front, Alg 3 for the tail)."""
+    sp = max(0, min(sp, len(layers)))
+    front, tail = layers[:sp], layers[sp:]
+    if dsp_p is None:
+        dsp_p = int(spec.dsp * (sum(l.macs for l in front)
+                                / max(1, sum(l.macs for l in layers))))
+    if bram_p is None:
+        bram_p = spec.bram_bytes * sp / max(1, len(layers))
+    if bw_p is None:
+        bw_p = spec.bw_bytes * 0.5
+
+    dsp_p = max(0, min(dsp_p, spec.dsp))
+    bram_p = max(0.0, min(bram_p, spec.bram_bytes))
+    bw_p = max(0.0, min(bw_p, spec.bw_bytes))
+
+    lut_p = spec.lut * (dsp_p / max(1, spec.dsp))
+    pipe = None
+    if front:
+        pipe = pipeline_performance(
+            front, spec, batch, wbits, abits,
+            dsp_budget=dsp_p, bram_budget=bram_p, bw_budget=bw_p,
+            lut_budget=lut_p)
+    gen = None
+    if tail:
+        gen = generic_dse(
+            tail, spec, batch, wbits, abits,
+            dsp_budget=spec.dsp - (dsp_p if front else 0),
+            bram_budget=spec.bram_bytes - (bram_p if front else 0.0),
+            bw_budget=spec.bw_bytes - (bw_p if front else 0.0),
+            lut_budget=spec.lut - (lut_p if front else 0.0))
+    feasible = ((pipe is None or pipe.feasible)
+                and (gen is None or gen.feasible))
+    return HybridDesign(sp, batch, pipe, gen, spec, wbits, abits, feasible)

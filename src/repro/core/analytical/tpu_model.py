@@ -1,0 +1,203 @@
+"""TPU-pod analytic performance model — the paper's Eqs. 3-10 rebuilt in
+the mesh-resource vocabulary.
+
+For one (arch, shape, plan) this predicts the three roofline terms per
+chip and a step time, **before** any compilation — the fast estimator
+inside the two-level DSE (exactly the role the FPGA analytical models
+play inside Algorithm 4's fitness function).
+
+Plan = how the work maps onto the (data, model) mesh:
+
+* per-layer-group sharding recipe (IS = weights streamed / FSDP,
+  WS = weights resident / Megatron TP) with a split-point SP — the
+  paradigm-3 front/tail structure;
+* microbatch count M (gradient accumulation — the BRAM<->BW trade);
+* remat policy (recompute vs store).
+
+Approximations are deliberate and documented inline; the model's error
+vs the compiled dry-run is itself a reported experiment (the Fig. 4/5
+analogue).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.hardware import TPU_V5E, TPUSpec
+from repro.core.workload import OpInfo, lm_block_ops, model_flops
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """Level-2 configuration of one layer group (the CPF/KPF analogue)."""
+
+    dataflow: str = "IS"          # IS (fsdp: stream weights) | WS (resident)
+    attn_mode: str = "heads"      # heads | seq  (how attention shards)
+    model_axis: int = 16
+
+    def model_shard(self, op: OpInfo) -> int:
+        """How many ways this op's compute shards over the model axis."""
+        n = self.model_axis
+        if op.kind == "attention" or op.weight_axis == "heads":
+            # seq-parallel attention shards query rows instead of heads —
+            # applicable regardless of head-count divisibility
+            if self.attn_mode == "seq":
+                return n
+            return n if op.width % n == 0 else 1
+        if op.weight_axis in ("ffn", "vocab", "ssm_inner", "ssm_heads"):
+            return n if op.width % n == 0 else 1
+        if op.weight_axis == "experts":
+            if op.width % n == 0:
+                return n                      # clean EP
+            return n                          # fallback: expert_ffn TP
+        return 1
+
+
+@dataclass(frozen=True)
+class TPUPlan:
+    """The full RAV-equivalent: [SP, M, front recipe, tail recipe]."""
+
+    sp: int = 0                   # layers [0, sp) use `front`, rest `tail`
+    front: ShardPlan = field(default_factory=ShardPlan)
+    tail: ShardPlan = field(default_factory=ShardPlan)
+    microbatches: int = 1
+    remat: str = "full"           # none | full
+    dp: int = 16
+    pods: int = 1
+
+    @property
+    def chips(self) -> int:
+        return self.pods * self.dp * self.tail.model_axis
+
+
+@dataclass
+class TPUAnalysis:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    per_op: List[Dict] = field(default_factory=list)
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap bound (the paper's max(...) form, Eq. 8/10)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def step_s_no_overlap(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def dominant(self) -> str:
+        return max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: getattr(self, k))
+
+
+def analyze(cfg: ModelConfig, shape: ShapeConfig, plan: TPUPlan,
+            chip: TPUSpec = TPU_V5E, flops_calibration: float = 1.0,
+            ) -> TPUAnalysis:
+    """Predict per-chip roofline terms for one plan.
+
+    flops_calibration multiplies raw model flops to absorb systematic
+    backend effects (calibrated once against the dry-run artifacts and
+    reported in EXPERIMENTS.md §Model-accuracy).
+    """
+    ops = lm_block_ops(cfg, shape.seq_len, shape.global_batch, shape.kind)
+    dp = plan.dp * plan.pods
+    M = max(1, plan.microbatches)
+    is_train = shape.kind == "train"
+    # fwd+bwd(+recompute) flop multiplier
+    fmul = 1.0
+    if is_train:
+        fmul = 3.0 + (1.0 if plan.remat == "full" else 0.0)
+
+    peak = chip.peak_flops("bfloat16")
+    ici = 2 * chip.ici_bw_per_link         # bidirectional ring
+    comp = mem = coll = 0.0
+    per_op = []
+
+    for op in ops:
+        sp_plan = plan.front if (0 <= op.layer_idx < plan.sp) else plan.tail
+        ms = sp_plan.model_shard(op)
+        shard = dp * ms if op.kind != "embed" else dp * ms
+        # ---- compute
+        f_chip = op.flops * fmul * flops_calibration / shard
+        comp += f_chip / peak
+
+        # ---- HBM traffic (per chip, per step)
+        # weights are read from HBM per use regardless of dataflow (IS
+        # gathers then reads; WS reads its resident shard): bytes/ms.
+        # train uses per step: M x (fwd + recompute-if-remat + bwd)
+        uses = (M * (3.0 if plan.remat == "full" else 2.0)) \
+            if is_train else 1.0
+        w_bytes = op.weight_bytes / ms * uses
+        if is_train:
+            # f32 grads + Adam moments r/w, stored fully sharded
+            w_bytes += 3 * 2 * op.weight_bytes / (ms * dp)
+        a_bytes = (op.act_in_bytes + op.act_out_bytes) / dp
+        if is_train:
+            a_bytes *= (3.0 if plan.remat == "none" else 4.0)
+        mem += (w_bytes + a_bytes) / chip.hbm_bw
+
+        # ---- collectives (per chip, per step)
+        c_bytes = 0.0
+        n = sp_plan.model_axis
+        if is_train and sp_plan.dataflow == "IS":
+            # per-microbatch weight all-gather + grad reduce-scatter on dp
+            c_bytes += 2 * M * (dp - 1) / dp * op.weight_bytes / ms
+        elif is_train:
+            # WS: gradient all-reduce over dp
+            c_bytes += 2 * (dp - 1) / dp * op.weight_bytes * 2.0 / ms
+        if ms > 1 and op.kind in ("matmul", "embed"):
+            # TP partial-sum all-reduce of the op output (fwd [+bwd])
+            out_b = op.act_out_bytes / dp
+            c_bytes += (2 if is_train else 1) * 2 * (n - 1) / n * out_b
+        if op.weight_axis == "experts" and op.width % n == 0:
+            # EP all-to-all of dispatched tokens (fwd [+bwd])
+            c_bytes += (2 if is_train else 1) * (n - 1) / n \
+                * op.act_in_bytes / dp
+        coll += c_bytes / ici
+
+        per_op.append({"name": op.name, "kind": op.kind,
+                       "compute_s": f_chip / peak,
+                       "mem_s": (w_bytes + a_bytes) / chip.hbm_bw,
+                       "coll_s": c_bytes / ici})
+
+    return TPUAnalysis(comp, mem, coll, per_op)
+
+
+def hbm_footprint(cfg: ModelConfig, shape: ShapeConfig, plan: TPUPlan,
+                  chip: TPUSpec = TPU_V5E) -> Dict[str, float]:
+    """Per-chip HBM residency (params/opt/grads/activation carries/KV),
+    the feasibility gate the DSE enforces (the paper's M_max)."""
+    n_params = cfg.param_count()
+    dp = plan.dp * plan.pods
+    ms = plan.tail.model_axis
+    shard_ways = ms * (dp if plan.tail.dataflow == "IS" else 1)
+    out: Dict[str, float] = {}
+    if shape.kind == "train":
+        out["params_f32"] = 4.0 * n_params / shard_ways
+        out["opt_f32"] = 8.0 * n_params / shard_ways
+        out["grads_f32"] = 4.0 * n_params / shard_ways
+        tokens_mb = shape.seq_len * shape.global_batch / plan.microbatches
+        carry = tokens_mb / dp * cfg.d_model * 2.0
+        n_carry = cfg.n_layers if plan.remat != "none" else 4 * cfg.n_layers
+        out["act_carries"] = carry * n_carry
+    else:
+        out["params_bf16"] = 2.0 * n_params / ms
+        if cfg.family in ("dense", "moe", "vlm"):
+            w = min(cfg.sliding_window or shape.seq_len, shape.seq_len)
+            kv = (cfg.n_layers * shape.global_batch * w
+                  * cfg.n_kv_heads * cfg.head_dim * 2 * 2)
+            out["kv_cache"] = kv / (dp * (ms if shape.kind == "decode"
+                                          else 1))
+        if cfg.ssm is not None:
+            s = cfg.ssm
+            di = s.d_inner(cfg.d_model)
+            st = (cfg.n_layers * shape.global_batch
+                  * s.n_heads(cfg.d_model) * s.head_dim * s.d_state * 4)
+            out["ssm_state"] = st / max(1, dp)
+    out["total"] = sum(out.values())
+    out["fits"] = out["total"] <= chip.hbm_bytes
+    return out

@@ -1,0 +1,14 @@
+from repro.core.dse.pso import PSOResult, particle_swarm
+from repro.core.dse.engine import (
+    FPGAExploreResult,
+    explore_fpga,
+    benchmark_paradigm,
+)
+
+__all__ = [
+    "PSOResult",
+    "particle_swarm",
+    "FPGAExploreResult",
+    "explore_fpga",
+    "benchmark_paradigm",
+]

@@ -1,0 +1,143 @@
+"""Two-level DSE engine (paper §5.3) — FPGA domain.
+
+Level 1: PSO (Algorithm 4) over RAV = [SP, Batch, DSP_p, BRAM_p, BW_p].
+Level 2: inside the fitness function, Algorithms 1+2 configure the
+pipeline section and Algorithm 3 configures the generic section.
+Fitness = analytic throughput (GOP/s).
+
+The TPU-domain engine lives in ``repro.core.analytical.tpu_model`` /
+``repro.core.dse.tpu_engine`` with the same two-level structure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.analytical.generic import generic_dse, generic_dsp_efficiency
+from repro.core.analytical.hybrid import HybridDesign, hybrid_performance
+from repro.core.analytical.pipeline import (
+    pipeline_dsp_efficiency,
+    pipeline_performance,
+)
+from repro.core.dse.pso import PSOResult, particle_swarm
+from repro.core.hardware import FPGASpec
+from repro.core.workload import ConvLayer, total_ops
+
+
+@dataclass
+class ParadigmReport:
+    paradigm: int
+    gops: float
+    dsp_eff: float
+    throughput_imgs: float
+    detail: object = None
+
+
+def benchmark_paradigm(
+    layers: Sequence[ConvLayer],
+    spec: FPGASpec,
+    paradigm: int,
+    batch: int = 1,
+    wbits: int = 16,
+    abits: int = 16,
+    sp: Optional[int] = None,
+    seed: int = 0,
+) -> ParadigmReport:
+    """Benchmark one paradigm after its respective optimization (paper §4).
+
+    paradigm 3 runs the two-level DSE (a small exploration unless the
+    caller wants the full Fig.-11 trace via :func:`explore_fpga`).
+    """
+    if paradigm == 1:
+        d = pipeline_performance(layers, spec, batch, wbits, abits)
+        gops = d.gops(batch) if d.feasible else 0.0
+        eff = pipeline_dsp_efficiency(d, spec, batch) if d.feasible else 0.0
+        return ParadigmReport(1, gops, eff, d.throughput_imgs(batch)
+                              if d.feasible else 0.0, d)
+    if paradigm == 2:
+        d = generic_dse(layers, spec, batch, wbits, abits)
+        return ParadigmReport(2, d.gops(batch),
+                              generic_dsp_efficiency(d, spec, batch),
+                              d.throughput_imgs(batch), d)
+    if paradigm == 3:
+        res = explore_fpga(layers, spec, batch=batch, wbits=wbits,
+                           abits=abits, n_iters=12, n_particles=12,
+                           fix_batch=batch is not None, seed=seed)
+        d = res.best_design
+        return ParadigmReport(3, d.gops(), d.dsp_efficiency(),
+                              d.throughput_imgs(), d)
+    raise ValueError(f"paradigm must be 1|2|3, got {paradigm}")
+
+
+@dataclass
+class FPGAExploreResult:
+    best_design: HybridDesign
+    pso: PSOResult
+    spec: FPGASpec
+    # Fig. 11 traces
+    batch_trace: List[int]
+    sp_trace: List[int]
+    gops_trace: List[float]
+
+
+def explore_fpga(
+    layers: Sequence[ConvLayer],
+    spec: FPGASpec,
+    batch: Optional[int] = None,
+    max_batch: int = 32,
+    wbits: int = 16,
+    abits: int = 16,
+    n_particles: int = 20,
+    n_iters: int = 20,
+    fix_batch: bool = False,
+    seed: int = 0,
+) -> FPGAExploreResult:
+    """Level-1 PSO over RAV (Algorithm 4 + Table 1 design space)."""
+    n = len(layers)
+    fix_batch = fix_batch and batch is not None
+
+    def decode(p: np.ndarray):
+        sp = int(p[0])
+        b = batch if fix_batch else max(1, int(p[1]))
+        dsp_p = int(p[2])
+        bram_p = float(p[3])
+        bw_p = float(p[4])
+        return sp, b, dsp_p, bram_p, bw_p
+
+    def fit(p: np.ndarray) -> float:
+        sp, b, dsp_p, bram_p, bw_p = decode(p)
+        d = hybrid_performance(layers, spec, sp, b, dsp_p, bram_p, bw_p,
+                               wbits, abits)
+        if not d.feasible:
+            return 0.0
+        return d.gops()
+
+    lo = [0, 1, 0, 0.0, 0.05 * spec.bw_bytes]
+    hi = [n, max_batch, spec.dsp, spec.bram_bytes, 0.95 * spec.bw_bytes]
+    # warm-start with the pure-paradigm corner points (SP=n pipeline-only,
+    # SP=0 generic-only) at a few batch sizes
+    b0 = batch if fix_batch else 1
+    seeds = [
+        [n, b0, spec.dsp, 0.7 * spec.bram_bytes, 0.9 * spec.bw_bytes],
+        [0, b0, 0, 0.0, 0.05 * spec.bw_bytes],
+        [n // 2, b0, spec.dsp // 2, 0.5 * spec.bram_bytes,
+         0.5 * spec.bw_bytes],
+    ]
+    if not fix_batch:
+        seeds += [[n, max_batch, spec.dsp, 0.7 * spec.bram_bytes,
+                   0.9 * spec.bw_bytes],
+                  [0, max_batch, 0, 0.0, 0.05 * spec.bw_bytes]]
+    res = particle_swarm(fit, lo, hi, integer=[True, True, True, False, False],
+                         n_particles=n_particles, n_iters=n_iters, seed=seed,
+                         seed_points=seeds)
+
+    sp, b, dsp_p, bram_p, bw_p = decode(res.best_position)
+    best = hybrid_performance(layers, spec, sp, b, dsp_p, bram_p, bw_p,
+                              wbits, abits)
+    batch_trace = [max(1, int(p[1])) if not fix_batch else batch
+                   for p in res.position_history]
+    sp_trace = [int(p[0]) for p in res.position_history]
+    return FPGAExploreResult(best, res, spec, batch_trace, sp_trace,
+                             list(res.history))

@@ -1,0 +1,122 @@
+"""Hardware specifications — the paper's step-1 'hardware analysis' inputs.
+
+Two resource vocabularies:
+
+* :class:`FPGASpec` — the paper's own targets (KU115, ZC706, VU9P, ZCU102),
+  used by the faithful FPGA-domain reproduction (Figs 4-11).
+* :class:`TPUSpec` — the adaptation target (TPU v5e pod), used by the TPU
+  analytic model and the roofline analysis. Constants match the assignment:
+  197 TFLOP/s bf16/chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FPGASpec:
+    """FPGA resource budget (the paper's C_max / M_max / BW_max)."""
+
+    name: str
+    dsp: int                 # DSP48 slices
+    bram18k: int             # 18 Kb block-RAM units
+    bw_bytes: float          # external memory bandwidth, bytes/s
+    lut: int = 600_000       # logic budget (caps per-stage control overhead)
+    freq_hz: float = 200e6   # paper uses 200 MHz throughout
+
+    @property
+    def bram_bytes(self) -> float:
+        return self.bram18k * 18 * 1024 / 8.0
+
+    def macs_per_dsp(self, bits: int) -> float:
+        """alpha/2 in the paper's Eq. 11: MACs one DSP finishes per cycle."""
+        if bits <= 8:
+            return 2.0   # alpha = 4
+        return 1.0       # alpha = 2 (16-bit)
+
+    def peak_gops(self, bits: int) -> float:
+        """alpha * DSP * FREQ (Eq. 11 denominator), in GOP/s."""
+        return 2.0 * self.macs_per_dsp(bits) * self.dsp * self.freq_hz / 1e9
+
+
+# Board budgets. DSP/BRAM/LUT from Xilinx datasheets; DRAM bandwidth from
+# the standard board configurations used by DNNBuilder / HybridDNN
+# (KU115 cards carry 2x DDR4-2400 banks; ZC706 uses the PL-side 64-bit
+# DDR3-1600 SODIMM = 12.8 GB/s — the DNNBuilder configuration; VU9P
+# cards carry 4x DDR4-2400).
+KU115 = FPGASpec("KU115", dsp=5520, bram18k=4320, bw_bytes=38.4e9, lut=663_360)
+ZC706 = FPGASpec("ZC706", dsp=900, bram18k=1090, bw_bytes=12.8e9, lut=218_600)
+VU9P = FPGASpec("VU9P", dsp=6840, bram18k=4320, bw_bytes=76.8e9, lut=1_182_240)
+ZCU102 = FPGASpec("ZCU102", dsp=2520, bram18k=1824, bw_bytes=19.2e9, lut=274_080)
+
+FPGAS = {s.name: s for s in (KU115, ZC706, VU9P, ZCU102)}
+
+
+@dataclass(frozen=True)
+class TPUSpec:
+    """Per-chip TPU budget + interconnect (the adapted C/M/BW vocabulary)."""
+
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12     # MXU, bf16
+    peak_flops_int8: float = 394e12
+    hbm_bytes: float = 16 * 1024**3
+    hbm_bw: float = 819e9               # bytes/s
+    ici_bw_per_link: float = 50e9       # bytes/s, each direction
+    ici_links: int = 4                  # 2D torus: +/-x, +/-y
+    vmem_bytes: float = 128 * 1024**2
+
+    def peak_flops(self, dtype: str = "bfloat16") -> float:
+        return self.peak_flops_int8 if dtype == "int8" else self.peak_flops_bf16
+
+
+TPU_V5E = TPUSpec()
+
+
+@dataclass(frozen=True)
+class MeshBudget:
+    """Resource budget of a (sub-)mesh — the TPU analogue of an RAV slice.
+
+    The DSE hands these out exactly like the paper hands out
+    [DSP_p, BRAM_p, BW_p] splits.
+    """
+
+    chips: int
+    chip: TPUSpec = TPU_V5E
+    # axis extents (dp x tp [x pp]); product == chips
+    dp: int = 1
+    tp: int = 1
+    pp: int = 1
+
+    @property
+    def peak_flops(self) -> float:
+        return self.chips * self.chip.peak_flops_bf16
+
+    @property
+    def hbm_bw(self) -> float:
+        return self.chips * self.chip.hbm_bw
+
+    @property
+    def hbm_bytes(self) -> float:
+        return self.chips * self.chip.hbm_bytes
+
+    @property
+    def ici_bw(self) -> float:
+        return self.chips * self.chip.ici_bw_per_link * self.chip.ici_links
+
+
+def ring_collective_bytes(payload: int, n: int, kind: str) -> float:
+    """Bytes crossing each participant's links for ring collectives.
+
+    all-reduce = reduce-scatter + all-gather = 2(n-1)/n * payload;
+    all-gather / reduce-scatter = (n-1)/n * payload;
+    all-to-all = (n-1)/n * payload;  collective-permute = payload.
+    """
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * payload
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n * payload
+    if kind == "collective-permute":
+        return float(payload)
+    raise ValueError(f"unknown collective kind {kind!r}")

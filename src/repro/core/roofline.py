@@ -1,0 +1,145 @@
+"""Roofline analysis from compiled SPMD artifacts.
+
+Three terms per (arch x shape x mesh), all **per-chip** (XLA's
+``cost_analysis``/``memory_analysis`` describe the per-device partitioned
+module; verified against a known matmul):
+
+    compute_term    = HLO_flops / peak_flops          [s]
+    memory_term     = HLO_bytes / hbm_bw              [s]
+    collective_term = link_bytes / ici_bw             [s]
+
+``link_bytes`` comes from parsing the optimized HLO: every
+all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute op's result shape, ring-scaled by its replica-group
+size (bidirectional ring: all-reduce moves 2(n-1)/n of the payload
+through each chip, gather/scatter (n-1)/n, permute 1x).
+
+The dominant term is the bottleneck the perf loop (§Perf) iterates on.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.hardware import TPU_V5E, TPUSpec
+from repro.core.workload import model_flops
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+# result-type chunks like  bf16[128,1024]{1,0}  or f32[]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\(?[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _result_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Per-chip ICI link bytes by collective kind (+ op counts)."""
+    out: Dict[str, float] = {
+        "all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+        "all-to-all": 0.0, "collective-permute": 0.0,
+    }
+    counts: Dict[str, int] = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        if "-done" in line or "replica_groups" not in line:
+            continue
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        rb = _result_bytes(type_str)
+        n = _group_size(line)
+        if n <= 1 and kind != "collective-permute":
+            continue
+        if kind == "all-reduce":
+            link = 2.0 * (n - 1) / n * rb
+        elif kind == "all-gather":
+            link = (n - 1) / n * rb          # result is the gathered tensor
+        elif kind == "reduce-scatter":
+            link = (n - 1) * rb              # result is the shard
+        elif kind == "all-to-all":
+            link = (n - 1) / n * rb
+        else:                                # collective-permute
+            link = rb
+        out[kind] += link
+        counts[kind] += 1
+    out["total"] = sum(out.values())
+    out["op_counts"] = counts               # type: ignore[assignment]
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float,
+                   chip: TPUSpec = TPU_V5E,
+                   dtype: str = "bfloat16") -> Dict[str, float]:
+    # bidirectional ring on one torus dim: 2 links active per chip
+    ici_bw = 2 * chip.ici_bw_per_link
+    return {
+        "compute_s": flops / chip.peak_flops(dtype),
+        "memory_s": bytes_accessed / chip.hbm_bw,
+        "collective_s": collective_bytes / ici_bw,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])
+
+
+def roofline_report(cfg: ModelConfig, shape: ShapeConfig,
+                    artifact: Dict, chip: TPUSpec = TPU_V5E) -> Dict:
+    """Assemble the §Roofline row from a dry-run artifact dict."""
+    chips = artifact["devices"]
+    flops = artifact["cost"]["flops"]                 # per-chip
+    byts = artifact["cost"]["bytes_accessed"]         # per-chip
+    coll = artifact["collectives"]["total"]           # per-chip
+    terms = roofline_terms(flops, byts, coll, chip)
+    dom = dominant_term(terms)
+    mflops = model_flops(cfg, shape)                  # global useful
+    if shape.kind == "train":
+        pass                                          # 6ND already
+    hlo_global = flops * chips
+    useful = mflops / hlo_global if hlo_global else 0.0
+    t_bound = max(terms.values())
+    # fraction of roofline: useful global flops per second at the
+    # bottleneck-bound step time, vs the fleet's peak
+    roofline_frac = (mflops / t_bound) / (chips * chip.peak_flops()) \
+        if t_bound > 0 else 0.0
+    return {
+        **{k: float(v) for k, v in terms.items()},
+        "dominant": dom,
+        "model_flops": float(mflops),
+        "useful_flops_ratio": float(useful),
+        "roofline_fraction": float(roofline_frac),
+        "step_time_bound_s": float(t_bound),
+    }

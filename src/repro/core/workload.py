@@ -1,0 +1,402 @@
+"""Layer-wise workload profiling — the paper's step 1.
+
+The paper ingests Caffe/PyTorch definitions and extracts per-layer type,
+configuration, compute + memory demand, and arithmetic intensity (CTC).
+Here the "framework definition" is either
+
+* a CNN layer list (:class:`ConvLayer`) for the faithful FPGA-domain
+  reproduction (AlexNet/ZF/VGG/YOLO/ResNet from public configs), or
+* a :class:`repro.configs.ModelConfig` for the assigned LM architectures,
+  profiled per (shape-kind) into :class:`OpInfo` records that feed the
+  TPU analytic model and the roofline reports.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+# ===========================================================================
+# FPGA-domain CNN workloads (paper section 4.3 vocabulary)
+# ===========================================================================
+@dataclass(frozen=True)
+class ConvLayer:
+    """One major pipeline-stage layer: CONV (or FC as 1x1 CONV on 1x1 map).
+
+    h, w: *input* feature map spatial dims; r, s: kernel; stride.
+    POOL layers are folded into the preceding CONV stage (paper §4.1:
+    BN/activation/pooling concatenate into the major layer).
+    """
+
+    name: str
+    h: int
+    w: int
+    cin: int
+    cout: int
+    r: int = 3
+    s: int = 3
+    stride: int = 1
+    pad: int = -1          # -1 => 'same' (r//2)
+    pool: int = 1          # output downsample by max-pool after the conv
+
+    @property
+    def h_out(self) -> int:
+        pad = self.r // 2 if self.pad < 0 else self.pad
+        return (self.h + 2 * pad - self.r) // self.stride + 1
+
+    @property
+    def w_out(self) -> int:
+        pad = self.s // 2 if self.pad < 0 else self.pad
+        return (self.w + 2 * pad - self.s) // self.stride + 1
+
+    @property
+    def h_final(self) -> int:
+        return max(1, self.h_out // self.pool)
+
+    @property
+    def w_final(self) -> int:
+        return max(1, self.w_out // self.pool)
+
+    @property
+    def macs(self) -> int:
+        return self.h_out * self.w_out * self.r * self.s * self.cin * self.cout
+
+    @property
+    def ops(self) -> int:
+        return 2 * self.macs
+
+    @property
+    def weight_count(self) -> int:
+        return self.r * self.s * self.cin * self.cout
+
+    def in_bytes(self, abits: int) -> float:
+        return self.h * self.w * self.cin * abits / 8.0
+
+    def out_bytes(self, abits: int) -> float:
+        return self.h_final * self.w_final * self.cout * abits / 8.0
+
+    def weight_bytes(self, wbits: int) -> float:
+        return self.weight_count * wbits / 8.0
+
+    def ctc(self, abits: int = 16, wbits: int = 16,
+            mode: str = "external") -> float:
+        """Computation-to-communication ratio (ops per DRAM byte), Fig. 6.
+
+        mode='external' counts DRAM traffic with feature maps resident
+        on-chip between layers (the paper's accelerator view: weights are
+        the streamed data) — this is what yields the ~256x median growth
+        from 32^2 to 512^2 inputs. mode='total' adds fmap in/out bytes.
+        """
+        comm = self.weight_bytes(wbits)
+        if mode == "total":
+            comm += self.in_bytes(abits) + self.out_bytes(abits)
+        return self.ops / comm
+
+
+def _chain(cfgs, h, w, name_prefix="conv") -> List[ConvLayer]:
+    """cfgs: list of (cout, r, stride, pool) applied sequentially."""
+    layers = []
+    cin = 3
+    for i, (cout, r, stride, pool) in enumerate(cfgs):
+        layer = ConvLayer(
+            f"{name_prefix}{i + 1}", h=h, w=w, cin=cin, cout=cout,
+            r=r, s=r, stride=stride, pool=pool,
+        )
+        layers.append(layer)
+        h, w, cin = layer.h_final, layer.w_final, cout
+        h = max(h, 1)
+        w = max(w, 1)
+    return layers
+
+
+def vgg16_conv(input_size: int = 224, extra_per_group: int = 0) -> List[ConvLayer]:
+    """VGG-16 CONV trunk (no FC), optionally deepened per paper §6.3.
+
+    extra_per_group = 0/1/3/5 gives the 13/18/28/38-layer VGG-like DNNs.
+    """
+    groups = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+    cfgs = []
+    for cout, n in groups:
+        n = n + extra_per_group
+        for j in range(n):
+            pool = 2 if j == n - 1 else 1
+            cfgs.append((cout, 3, 1, pool))
+    return _chain(cfgs, input_size, input_size, "conv")
+
+
+def alexnet(input_size: int = 224) -> List[ConvLayer]:
+    """torchvision AlexNet: 5 CONV (+pools) + 3 FC."""
+    layers = []
+    l1 = ConvLayer("conv1", input_size, input_size, 3, 64, 11, 11, stride=4, pad=2, pool=2)
+    layers.append(l1)
+    l2 = ConvLayer("conv2", l1.h_final, l1.w_final, 64, 192, 5, 5, pad=2, pool=2)
+    layers.append(l2)
+    l3 = ConvLayer("conv3", l2.h_final, l2.w_final, 192, 384, 3, 3)
+    layers.append(l3)
+    l4 = ConvLayer("conv4", l3.h_final, l3.w_final, 384, 256, 3, 3)
+    layers.append(l4)
+    l5 = ConvLayer("conv5", l4.h_final, l4.w_final, 256, 256, 3, 3, pool=2)
+    layers.append(l5)
+    flat = l5.h_final * l5.w_final * 256
+    layers.append(ConvLayer("fc1", 1, 1, flat, 4096, 1, 1, pad=0))
+    layers.append(ConvLayer("fc2", 1, 1, 4096, 4096, 1, 1, pad=0))
+    layers.append(ConvLayer("fc3", 1, 1, 4096, 1000, 1, 1, pad=0))
+    return layers
+
+
+def zfnet(input_size: int = 224) -> List[ConvLayer]:
+    layers = []
+    l1 = ConvLayer("conv1", input_size, input_size, 3, 96, 7, 7, stride=2, pad=1, pool=2)
+    layers.append(l1)
+    l2 = ConvLayer("conv2", l1.h_final, l1.w_final, 96, 256, 5, 5, stride=2, pad=0, pool=2)
+    layers.append(l2)
+    l3 = ConvLayer("conv3", l2.h_final, l2.w_final, 256, 384, 3, 3)
+    layers.append(l3)
+    l4 = ConvLayer("conv4", l3.h_final, l3.w_final, 384, 384, 3, 3)
+    layers.append(l4)
+    l5 = ConvLayer("conv5", l4.h_final, l4.w_final, 384, 256, 3, 3, pool=2)
+    layers.append(l5)
+    flat = l5.h_final * l5.w_final * 256
+    layers.append(ConvLayer("fc1", 1, 1, flat, 4096, 1, 1, pad=0))
+    layers.append(ConvLayer("fc2", 1, 1, 4096, 4096, 1, 1, pad=0))
+    layers.append(ConvLayer("fc3", 1, 1, 4096, 1000, 1, 1, pad=0))
+    return layers
+
+
+def yolo_tiny(input_size: int = 448) -> List[ConvLayer]:
+    """Tiny-YOLOv1 trunk (9 CONV), the DNNBuilder YOLO benchmark shape."""
+    cfgs = [
+        (16, 3, 1, 2), (32, 3, 1, 2), (64, 3, 1, 2), (128, 3, 1, 2),
+        (256, 3, 1, 2), (512, 3, 1, 2), (1024, 3, 1, 1), (1024, 3, 1, 1),
+        (1024, 3, 1, 1),
+    ]
+    return _chain(cfgs, input_size, input_size, "conv")
+
+
+def _resnet_blocks(layers_per_stage: Sequence[int], input_size: int) -> List[ConvLayer]:
+    out: List[ConvLayer] = []
+    stem = ConvLayer("conv1", input_size, input_size, 3, 64, 7, 7, stride=2, pad=3, pool=2)
+    out.append(stem)
+    h = w = stem.h_final
+    cin = 64
+    widths = [64, 128, 256, 512]
+    for stage, (n_blocks, cout) in enumerate(zip(layers_per_stage, widths)):
+        for b in range(n_blocks):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            l1 = ConvLayer(f"s{stage}b{b}c1", h, w, cin, cout, 3, 3, stride=stride)
+            out.append(l1)
+            h, w = l1.h_final, l1.w_final
+            l2 = ConvLayer(f"s{stage}b{b}c2", h, w, cout, cout, 3, 3)
+            out.append(l2)
+            if stride == 2 or cin != cout:
+                out.append(ConvLayer(f"s{stage}b{b}ds", l1.h, l1.w, cin, cout, 1, 1,
+                                     stride=stride, pad=0))
+            cin = cout
+    out.append(ConvLayer("fc", 1, 1, 512, 1000, 1, 1, pad=0))
+    return out
+
+
+def resnet18(input_size: int = 224) -> List[ConvLayer]:
+    return _resnet_blocks([2, 2, 2, 2], input_size)
+
+
+def resnet34(input_size: int = 224) -> List[ConvLayer]:
+    return _resnet_blocks([3, 4, 6, 3], input_size)
+
+
+CNN_ZOO = {
+    "vgg16": vgg16_conv,
+    "alexnet": alexnet,
+    "zf": zfnet,
+    "yolo": yolo_tiny,
+    "resnet18": resnet18,
+    "resnet34": resnet34,
+}
+
+# Fig. 6 / Fig. 8 input-size sweep (12 cases).
+INPUT_SIZE_CASES = [32, 64, 96, 128, 160, 192, 224, 256, 320, 384, 448, 512]
+
+
+def total_ops(layers: Sequence[ConvLayer]) -> int:
+    return sum(l.ops for l in layers)
+
+
+def ctc_stats(layers: Sequence[ConvLayer], abits=16, wbits=16,
+              mode: str = "external"):
+    vals = sorted(l.ctc(abits, wbits, mode) for l in layers)
+    n = len(vals)
+    med = vals[n // 2] if n % 2 else 0.5 * (vals[n // 2 - 1] + vals[n // 2])
+    return {"min": vals[0], "median": med, "max": vals[-1]}
+
+
+# ===========================================================================
+# TPU-domain LM workloads (adapted step-1 profiling)
+# ===========================================================================
+@dataclass(frozen=True)
+class OpInfo:
+    """One profiled operator group inside a transformer/SSM block.
+
+    flops:        forward FLOPs for the whole global batch/seq slice
+    weight_bytes: parameter bytes touched (bf16)
+    act_in/out:   activation bytes in/out (bf16)
+    kind:         matmul | attention | scan | router | embed | norm
+    weight_axis:  logical sharding axis of the weight's wide dim (the
+                  model-parallel candidate) — consumed by the TPU
+                  analytic model to decide what shards where
+    width:        size of that dim (divisibility check)
+    """
+
+    name: str
+    kind: str
+    flops: float
+    weight_bytes: float
+    act_in_bytes: float
+    act_out_bytes: float
+    layer_idx: int = -1
+    weight_axis: Optional[str] = None
+    width: int = 0
+
+    @property
+    def intensity(self) -> float:
+        denom = self.weight_bytes + self.act_in_bytes + self.act_out_bytes
+        return self.flops / max(denom, 1.0)
+
+
+def _bpe(dtype: str = "bfloat16") -> int:
+    return {"bfloat16": 2, "float32": 4, "int8": 1}[dtype]
+
+
+def lm_block_ops(
+    cfg: ModelConfig,
+    seq: int,
+    batch: int,
+    kind: str,
+    kv_len: Optional[int] = None,
+) -> List[OpInfo]:
+    """Profile one model into per-layer OpInfo records.
+
+    kind: 'train' (fwd; trainer scales by 3x for bwd), 'prefill', 'decode'
+    (decode: seq tokens of KV cache, 1 new token per sequence).
+    """
+    bpe = _bpe(cfg.dtype)
+    d = cfg.d_model
+    ops: List[OpInfo] = []
+    if kind == "decode":
+        q_tokens = batch                      # one new token per sequence
+        kv_len = kv_len if kv_len is not None else seq
+        if cfg.sliding_window:
+            kv_len = min(kv_len, cfg.sliding_window)
+    else:
+        q_tokens = batch * seq
+        kv_len = seq
+
+    tok_bytes = q_tokens * d * bpe
+
+    # Embedding gather
+    ops.append(OpInfo("embed", "embed", 0.0, cfg.vocab_size * d * bpe,
+                      q_tokens * 4, tok_bytes, -1, "vocab",
+                      cfg.vocab_size))
+
+    attn_layers = set(cfg.attention_layer_indices())
+    ssm_layers = set(cfg.ssm_layer_indices())
+    hd, nq, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+
+    for li in range(cfg.n_layers):
+        if li in attn_layers:
+            qkv_w = (d * nq * hd + 2 * d * nkv * hd) * bpe
+            o_w = nq * hd * d * bpe
+            qkv_flops = 2 * q_tokens * d * (nq + 2 * nkv) * hd
+            o_flops = 2 * q_tokens * nq * hd * d
+            ops.append(OpInfo(f"L{li}.qkv", "matmul", qkv_flops, qkv_w,
+                              tok_bytes,
+                              q_tokens * (nq + 2 * nkv) * hd * bpe, li,
+                              "heads", nq))
+            # attention scores+pv; causal halves the effective kv per query
+            eff_kv = kv_len
+            if cfg.causal and kind != "decode":
+                eff_kv = kv_len / 2
+                if cfg.sliding_window:
+                    eff_kv = min(eff_kv, cfg.sliding_window)
+            attn_flops = 2 * 2 * q_tokens * nq * hd * eff_kv
+            kv_bytes = batch * kv_len * nkv * hd * 2 * bpe
+            ops.append(OpInfo(f"L{li}.attn", "attention", attn_flops, 0.0,
+                              q_tokens * nq * hd * bpe + kv_bytes,
+                              q_tokens * nq * hd * bpe, li,
+                              "heads_full", nq))
+            ops.append(OpInfo(f"L{li}.attn_out", "matmul", o_flops, o_w,
+                              q_tokens * nq * hd * bpe, tok_bytes, li,
+                              "heads", nq))
+            # FFN (dense or MoE)
+            if cfg.moe is not None:
+                m = cfg.moe
+                ops.append(OpInfo(f"L{li}.router", "router",
+                                  2 * q_tokens * d * m.n_experts,
+                                  d * m.n_experts * bpe, tok_bytes,
+                                  q_tokens * m.n_experts * 4, li,
+                                  "experts", m.n_experts))
+                expert_flops = 2 * q_tokens * m.experts_per_token * 3 * d * m.d_expert
+                expert_w = m.n_experts * 3 * d * m.d_expert * bpe
+                ops.append(OpInfo(f"L{li}.experts", "matmul", expert_flops,
+                                  expert_w, tok_bytes * m.experts_per_token,
+                                  tok_bytes, li, "experts", m.n_experts))
+                if m.n_shared_experts:
+                    sh = m.n_shared_experts * (m.d_shared_expert or m.d_expert)
+                    ops.append(OpInfo(f"L{li}.shared_expert", "matmul",
+                                      2 * q_tokens * 3 * d * sh,
+                                      3 * d * sh * bpe, tok_bytes,
+                                      tok_bytes, li, "ffn", sh))
+            elif cfg.d_ff:
+                nmat = 3 if cfg.mlp == "swiglu" else 2
+                ops.append(OpInfo(f"L{li}.mlp", "matmul",
+                                  2 * q_tokens * nmat * d * cfg.d_ff,
+                                  nmat * d * cfg.d_ff * bpe, tok_bytes,
+                                  tok_bytes, li, "ffn", cfg.d_ff))
+        if li in ssm_layers and cfg.ssm is not None:
+            s = cfg.ssm
+            di = s.d_inner(d)
+            nh = s.n_heads(d)
+            proj_out_dim = 2 * di + 2 * s.n_groups * s.d_state + nh
+            proj_in = d * proj_out_dim
+            ops.append(OpInfo(f"L{li}.ssm_in", "matmul",
+                              2 * q_tokens * proj_in, proj_in * bpe,
+                              tok_bytes, q_tokens * proj_out_dim * bpe, li,
+                              "ssm_inner", proj_out_dim))
+            # SSD scan: per token, per head: state update + output
+            # ~ 6 * d_state flops per channel (dA*h + B x outer + C y inner)
+            scan_flops = 6.0 * q_tokens * di * s.d_state
+            state_bytes = batch * nh * s.head_dim * s.d_state * 4
+            ops.append(OpInfo(f"L{li}.ssd_scan", "scan", scan_flops,
+                              0.0, q_tokens * di * bpe + state_bytes,
+                              q_tokens * di * bpe, li, "ssm_heads", nh))
+            ops.append(OpInfo(f"L{li}.ssm_out", "matmul",
+                              2 * q_tokens * di * d, di * d * bpe,
+                              q_tokens * di * bpe, tok_bytes, li,
+                              "ssm_inner", di))
+
+    # LM head (skip for encoder-only training repr — hubert predicts codes,
+    # still a d x vocab matmul)
+    ops.append(OpInfo("lm_head", "matmul",
+                      2 * q_tokens * d * cfg.vocab_size,
+                      d * cfg.vocab_size * bpe, tok_bytes,
+                      q_tokens * cfg.vocab_size * bpe, -1, "vocab",
+                      cfg.vocab_size))
+    return ops
+
+
+def profile_arch(cfg: ModelConfig, shape: ShapeConfig) -> List[OpInfo]:
+    return lm_block_ops(cfg, shape.seq_len, shape.global_batch, shape.kind)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per assignment."""
+    n = cfg.active_param_count() if cfg.moe is not None else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch   # decode: one token per sequence

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMData, host_shard, make_global_batch
+
+__all__ = ["SyntheticLMData", "host_shard", "make_global_batch"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel file carries the pallas_call + BlockSpec tiling; ``ops.py``
+exposes jit'd wrappers (interpret mode off-TPU); ``ref.py`` holds the
+pure-jnp oracles the tests assert against.
+
+| kernel              | hot spot                      | paper linkage |
+|---------------------|-------------------------------|---------------|
+| flash_attention     | train/prefill attention       | column-cache: stationary Q rows, streamed KV columns |
+| decode_attention    | split-KV one-token decode     | the kv_seq-sharded decode recipe at chip level |
+| ssd_scan            | Mamba-2 chunked SSD           | accumulation buffer: state stays in VMEM across chunks |
+| moe_gemm            | grouped expert GEMM           | paradigm-1: dedicated compute per expert via the grid |
+| rmsnorm             | norm epilogue                 | fused VPU epilogue |
+"""

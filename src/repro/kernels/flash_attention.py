@@ -1,0 +1,137 @@
+"""Flash attention forward kernel (TPU Pallas).
+
+The paper-level linkage: this is the column-based cache scheme in MXU
+form — Q rows stay stationary in VMEM while K/V "columns" stream
+through, with the online-softmax update replacing the accumulation
+buffer. Tiling:
+
+    grid = (B * Hq, S / block_q, T / block_k)      (k innermost)
+
+Per program: q tile (block_q, D) resident; k/v tiles (block_k, D)
+streamed; running (m, l, acc) in VMEM scratch carried across the
+sequential k dim. Block sizes default to MXU-aligned 128/512 and are
+swept by the unit tests (8..512) in interpret mode.
+
+GQA is handled in the index map (kv head = q head // group) — no KV
+replication in memory.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                sm_scale: float, causal: bool, window: int,
+                block_q: int, block_k: int, kv_len: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    run = jnp.bool_(True)
+    if causal:
+        # skip blocks fully above the diagonal
+        run &= k_start <= q_start + block_q - 1
+    if window:
+        # skip blocks fully outside the sliding window
+        run &= k_start + block_k > q_start - window + 1
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                 # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    """q: (B, S, Hq, D); k, v: (B, T, Hkv, D) -> (B, S, Hq, D)."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+
+    # pad S and T to block multiples
+    Sp = -(-S // block_q) * block_q
+    Tp = -(-T // block_k) * block_k
+    qt = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hkv, T, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hkv, T, D)
+    if Sp != S:
+        qt = jnp.pad(qt, ((0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        kt = jnp.pad(kt, ((0, 0), (0, Tp - T), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, Tp - T), (0, 0)))
+
+    grid = (B * Hq, Sp // block_q, Tp // block_k)
+    kern = functools.partial(
+        _fwd_kernel, sm_scale=1.0 / math.sqrt(D), causal=causal,
+        window=window, block_q=block_q, block_k=block_k, kv_len=T)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, iq, ik, g=G: (bh // g, ik, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, iq, ik, g=G: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :S].reshape(B, Hq, S, D).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,66 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (kernel bodies execute in Python
+via the Pallas interpreter — correctness path); on real TPU backends the
+compiled kernels run natively. ``ModelRuntime.use_kernels`` selects
+these over the pure-XLA model paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_splitkv
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.moe_gemm import grouped_gemm_padded, sort_by_expert
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 512) -> jax.Array:
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, kv_mask, *,
+                     block_k: int = 512) -> jax.Array:
+    return decode_attention_splitkv(q, k_cache, v_cache, kv_mask,
+                                    block_k=block_k,
+                                    interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128):
+    return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                           interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "block_m",
+                                             "block_f"))
+def moe_grouped_matmul(x, w, expert_of_row, *, n_experts: int,
+                       block_m: int = 128, block_f: int = 512) -> jax.Array:
+    """x: (T, d); w: (E, d, f); expert_of_row: (T,) -> (T, f)."""
+    x_pad, block_expert, inv, _ = sort_by_expert(
+        x, expert_of_row, n_experts, block_m)
+    out = grouped_gemm_padded(x_pad, w, block_expert,
+                              block_f=min(block_f, w.shape[-1]),
+                              interpret=not _on_tpu())
+    return out[inv]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, scale, *, eps: float = 1e-6,
+            block_rows: int = 256) -> jax.Array:
+    return rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows,
+                          interpret=not _on_tpu())

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Deliberately *naive* implementations (quadratic attention, sequential
+SSM recurrence, per-expert loop) — independent of both the production
+XLA paths and the kernels they validate.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  ) -> jax.Array:
+    """q: (B, S, Hq, D); k, v: (B, T, Hkv, D) -> (B, S, Hq, D)."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kf)
+    s = s / jnp.sqrt(jnp.float32(D))
+    qpos = jnp.arange(S)
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", p, vf)
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_mask) -> jax.Array:
+    """q: (B, Hq, D); caches (B, W, Hkv, D); kv_mask (B, W)."""
+    B, Hq, D = q.shape
+    W, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    kf = jnp.repeat(k_cache.astype(jnp.float32), G, axis=2)
+    vf = jnp.repeat(v_cache.astype(jnp.float32), G, axis=2)
+    s = jnp.einsum("bhd,bwhd->bhw", q.astype(jnp.float32), kf)
+    s = s / jnp.sqrt(jnp.float32(D))
+    s = jnp.where(kv_mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhw,bwhd->bhd", p, vf).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, init_state: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential SSM recurrence (the definition SSD must match).
+
+    x: (b, S, nh, hp); dt: (b, S, nh); A: (nh,) negative;
+    B, C: (b, S, nh, N). Returns (y, final state (b, nh, hp, N))."""
+    b, S, nh, hp = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    h0 = (jnp.zeros((b, nh, hp, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, t):
+        dA = jnp.exp(dtf[:, t] * A)                        # (b, nh)
+        upd = jnp.einsum("bhn,bhp,bh->bhpn", Bf[:, t], xf[:, t], dtf[:, t])
+        h = h * dA[..., None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", Cf[:, t], h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1)                             # (b, S, nh, hp)
+    return y.astype(x.dtype), h
+
+
+def grouped_gemm_ref(x, w, group_sizes) -> jax.Array:
+    """x: (T, d) rows grouped contiguously by expert; w: (E, d, f);
+    group_sizes: (E,) summing to T. Returns (T, f)."""
+    T, d = x.shape
+    E, _, f = w.shape
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(group_sizes).astype(jnp.int32)])
+    row = jnp.arange(T)
+    expert_of_row = jnp.sum(row[:, None] >= offs[None, 1:], axis=-1)
+    wx = w[expert_of_row]                                  # (T, d, f)
+    return jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                      wx.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)

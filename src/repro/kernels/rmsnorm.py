@@ -1,0 +1,48 @@
+"""Fused RMSNorm kernel — TPU Pallas.
+
+One pass over each row tile in VMEM: mean-square, rsqrt, scale, all in
+f32, cast on write. Epilogue fusion (norm after residual-add) is the
+bread-and-butter VPU kernel; included as the minimal-kernel exemplar.
+
+    grid = (rows / block_rows,)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+                   interpret: bool = True) -> jax.Array:
+    """x: (..., d); scale: (d,)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xr = x.reshape(-1, d)
+    R = xr.shape[0]
+    block_rows = min(block_rows, R)
+    Rp = -(-R // block_rows) * block_rows
+    if Rp != R:
+        xr = jnp.pad(xr, ((0, Rp - R), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(Rp // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, d), x.dtype),
+        interpret=interpret,
+    )(xr, scale)
+    return out[:R].reshape(orig_shape)

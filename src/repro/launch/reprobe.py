@@ -1,0 +1,61 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Recompute the cost probe + roofline for existing dry-run artifacts
+(production compile results — memory, compile times — are kept).
+Used after probe-methodology fixes so the 80-cell table stays coherent
+without re-running the expensive production compiles.
+"""
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import get_arch, get_shape
+from repro.core.roofline import roofline_report
+from repro.launch.dryrun import ARTIFACT_DIR, cost_probe, default_recipe
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import ModelRuntime
+
+
+def main(out_dir: str = ARTIFACT_DIR):
+    meshes = {"single": make_production_mesh(),
+              "multi": make_production_mesh(multi_pod=True)}
+    names = sorted(n for n in os.listdir(out_dir) if n.endswith(".json"))
+    for name in names:
+        path = os.path.join(out_dir, name)
+        with open(path) as f:
+            art = json.load(f)
+        if art.get("status") != "OK":
+            continue
+        cfg = get_arch(art["arch"])
+        shape = get_shape(art["shape"])
+        mesh = meshes[art["mesh"]]
+        model_axis = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+        recipe = default_recipe(cfg, shape, model_axis)
+        rt = ModelRuntime(dtype="bfloat16", remat=art.get("remat", "full"),
+                          attn_chunk=art.get("attn_chunk", 512),
+                          moe_chunk=art.get("moe_chunk", 0))
+        t0 = time.time()
+        try:
+            probe = cost_probe(cfg, shape, mesh, recipe, rt,
+                               art.get("microbatches", 1))
+        except Exception as e:                       # noqa: BLE001
+            print(f"[FAIL] {name}: {type(e).__name__}: {e}", flush=True)
+            continue
+        art["cost"] = {k: probe[k] for k in
+                       ("flops", "bytes_accessed", "transcendentals",
+                        "probe_depths")}
+        art["collectives"] = probe["collectives"]
+        art["roofline"] = roofline_report(cfg, shape, art)
+        with open(path, "w") as f:
+            json.dump(art, f, indent=1)
+        print(f"[OK] {name} ({time.time()-t0:.0f}s) "
+              f"compute={art['roofline']['compute_s']:.3g}s "
+              f"dom={art['roofline']['dominant']}", flush=True)
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,93 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Full production loop: deterministic data pipeline, AdamW (+WSD where the
+arch dictates), gradient accumulation, straggler monitor, async
+checkpointing with restart-from-latest — on whatever devices jax sees
+(CPU smoke runs use ``--smoke``; pod runs use the recipe flags).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.ckpt import AsyncCheckpointer, latest_step, restore
+from repro.configs import get_arch, smoke_config
+from repro.data import SyntheticLMData
+from repro.dist.fault import StepMonitor
+from repro.dist.sharding import RECIPES
+from repro.models import init_params
+from repro.models.model import ModelRuntime
+from repro.train import AdamWConfig, TrainConfig, train_loop
+from repro.train.loop import init_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--recipe", default=None, choices=[None, *RECIPES])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    rt = ModelRuntime(dtype=args.dtype, remat="none", attn_chunk=128)
+    recipe = RECIPES[args.recipe] if args.recipe else None
+
+    data = SyntheticLMData(args.seq, args.batch, cfg.vocab_size,
+                           seed=args.seed, mode="lcg",
+                           frontend=cfg.frontend, d_model=cfg.d_model)
+    tc = TrainConfig(
+        opt=AdamWConfig(peak_lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                        total_steps=args.steps, schedule=cfg.lr_schedule
+                        if cfg.lr_schedule == "wsd" else "cosine"),
+        microbatches=args.microbatches,
+        max_steps=args.steps, log_every=max(1, args.steps // 20),
+        ckpt_every=args.ckpt_every if args.ckpt_dir else 0)
+
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    state = init_state(params)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"devices={jax.device_count()} schedule={tc.opt.schedule}")
+
+    ckpt_fn = None
+    ckpter = None
+    if args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            print(f"restoring from step {last}")
+            state = restore(args.ckpt_dir, last, state)
+        ckpter = AsyncCheckpointer(args.ckpt_dir)
+        ckpt_fn = lambda step, st: ckpter.submit(step, st)
+
+    monitor = StepMonitor(
+        on_straggler=lambda ev: print(
+            f"[fault] straggler at step {ev.step}: {ev.duration:.2f}s "
+            f"vs median {ev.median:.2f}s"))
+
+    state = train_loop(cfg, rt, tc, state, iter(data), recipe,
+                       ckpt_fn=ckpt_fn, monitor=monitor)
+    if ckpter is not None:
+        ckpter.submit(args.steps, {k: v for k, v in state.items()
+                                   if not k.startswith("_")})
+        ckpter.close()
+    losses = state["_losses"]
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({len(losses)} steps, median step "
+          f"{monitor.median:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

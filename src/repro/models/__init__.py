@@ -1,0 +1,27 @@
+from repro.models.model import (
+    ModelRuntime,
+    init_params,
+    param_defs,
+    axes_tree,
+    abstract_params,
+    forward,
+    loss_fn,
+    init_cache,
+    abstract_cache,
+    decode_step,
+    prefill,
+)
+
+__all__ = [
+    "ModelRuntime",
+    "init_params",
+    "param_defs",
+    "axes_tree",
+    "abstract_params",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "abstract_cache",
+    "decode_step",
+    "prefill",
+]

@@ -1,0 +1,536 @@
+"""Model assembly: one functional LM covering all assigned families.
+
+* dense / moe / vlm / audio  — stacked transformer blocks (lax.scan)
+* ssm                        — stacked Mamba-2 blocks
+* hybrid (Zamba2)            — Mamba-2 backbone, a *shared* transformer
+                               block applied every ``shared_attn_period``
+                               layers, alternating between
+                               ``n_shared_attn_blocks`` physical blocks
+
+Parameters are a pytree of f32 master weights; per-layer weights are
+stacked on a leading ``layers`` axis and scanned. Activations run in
+``ModelRuntime.dtype``. Sharding is expressed through logical axis names
+(``repro.dist.sharding``); the same code runs unsharded CPU smoke tests
+and the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.attention import chunked_attention, decode_attention
+from repro.models.layers import ParamDef, norm, norm_defs, swiglu
+
+
+@dataclass(frozen=True)
+class ModelRuntime:
+    """Training/serving-time knobs (not part of the architecture)."""
+
+    dtype: str = "bfloat16"
+    remat: str = "dots"          # none | dots | full
+    attn_chunk: int = 512
+    use_kernels: bool = False    # select Pallas kernels on real TPUs
+    moe_dropless: bool = False   # capacity = T (prefill consistency/serving)
+    moe_chunk: int = 0           # GShard token-group size (0 = one group)
+    unroll_layers: bool = False  # fully unroll layer scans (cost probes)
+
+
+# ===========================================================================
+# Parameter definitions
+# ===========================================================================
+def _attn_defs(cfg: ModelConfig, n: int) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    s = (n,)
+    sx = ("layers",)
+    defs: Dict[str, Any] = {
+        "ln1": {k: ParamDef(s + v.shape, sx + v.axes, v.init)
+                for k, v in norm_defs(d, cfg.norm).items()},
+        "wq": ParamDef(s + (d, nq * hd), sx + ("embed", "heads")),
+        "wk": ParamDef(s + (d, nkv * hd), sx + ("embed", "kv_heads")),
+        "wv": ParamDef(s + (d, nkv * hd), sx + ("embed", "kv_heads")),
+        "wo": ParamDef(s + (nq * hd, d), sx + ("heads", "embed")),
+        "ln2": {k: ParamDef(s + v.shape, sx + v.axes, v.init)
+                for k, v in norm_defs(d, cfg.norm).items()},
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef(s + (hd,), sx + (None,), "ones")
+        defs["k_norm"] = ParamDef(s + (hd,), sx + (None,), "ones")
+    if cfg.moe is not None:
+        defs["moe"] = MOE.moe_defs(cfg, stack=s)
+    elif cfg.d_ff:
+        if cfg.mlp == "swiglu":
+            defs["wg"] = ParamDef(s + (d, cfg.d_ff), sx + ("embed", "ffn"))
+        defs["wi"] = ParamDef(s + (d, cfg.d_ff), sx + ("embed", "ffn"))
+        defs["wo2"] = ParamDef(s + (cfg.d_ff, d), sx + ("ffn", "embed"))
+    return defs
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), "embed"),
+        "final_norm": norm_defs(d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, v), ("embed", "vocab"))
+    fam = cfg.family
+    if fam == "ssm":
+        defs["blocks"] = {
+            "ssm": SSM.ssm_defs(cfg, stack=(cfg.n_layers,)),
+            "ln": {k: ParamDef((cfg.n_layers,) + p.shape,
+                               ("layers",) + p.axes, p.init)
+                   for k, p in norm_defs(d, cfg.norm).items()},
+        }
+    elif fam == "hybrid":
+        defs["blocks"] = {
+            "ssm": SSM.ssm_defs(cfg, stack=(cfg.n_layers,)),
+            "ln": {k: ParamDef((cfg.n_layers,) + p.shape,
+                               ("layers",) + p.axes, p.init)
+                   for k, p in norm_defs(d, cfg.norm).items()},
+        }
+        defs["shared"] = _attn_defs(cfg, cfg.n_shared_attn_blocks)
+    else:
+        defs["blocks"] = _attn_defs(cfg, cfg.n_layers)
+    return defs
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    return L.init_from_defs(param_defs(cfg), key)
+
+
+def axes_tree(cfg: ModelConfig):
+    return L.axes_from_defs(param_defs(cfg))
+
+
+def abstract_params(cfg: ModelConfig, dtype: Optional[str] = None):
+    """ShapeDtypeStruct tree; dtype override casts everything (e.g. bf16
+    inference weights for the serving dry-runs)."""
+    tree = L.abstract_from_defs(param_defs(cfg))
+    if dtype is not None:
+        tree = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(dtype)), tree)
+    return tree
+
+
+# ===========================================================================
+# Blocks
+# ===========================================================================
+def _mlp(p: Dict[str, jax.Array], h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        z = swiglu(h @ p["wg"].astype(h.dtype), h @ p["wi"].astype(h.dtype))
+    else:
+        z = jax.nn.gelu(h @ p["wi"].astype(h.dtype))
+    z = constrain(z, ("batch", "seq", "ffn"))
+    return z @ p["wo2"].astype(h.dtype)
+
+
+def _attn_proj(p, h, cfg):
+    B, S, _ = h.shape
+    hd = cfg.head_dim
+    q = (h @ p["wq"].astype(h.dtype)).reshape(B, S, cfg.n_heads, hd)
+    k = (h @ p["wk"].astype(h.dtype)).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (h @ p["wv"].astype(h.dtype)).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"])
+        k = L.rmsnorm(k, p["k_norm"])
+    return q, k, v
+
+
+def attn_block(p: Dict[str, Any], x: jax.Array, positions: jax.Array,
+               cfg: ModelConfig, rt: ModelRuntime,
+               ) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Pre-norm attention + FFN block. Returns (x, aux_loss, (k, v)).
+
+    k/v are post-RoPE — exactly what the decode cache stores; callers
+    that don't prefill simply drop them (XLA dead-code-eliminates)."""
+    h = norm(x, p["ln1"], cfg.norm)
+    q, k, v = _attn_proj(p, h, cfg)
+    q, k = L.apply_rope(q, k, positions, cfg)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    o = chunked_attention(q, k, v, causal=cfg.causal,
+                          window=cfg.sliding_window, chunk=rt.attn_chunk)
+    o = o.reshape(x.shape[0], x.shape[1], -1)
+    x = x + o @ p["wo"].astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    h2 = norm(x, p["ln2"], cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        y, aux = MOE.moe_ffn(p["moe"], h2, cfg, dropless=rt.moe_dropless,
+                             token_chunk=rt.moe_chunk)
+    else:
+        y = _mlp(p, h2, cfg)
+    x = x + y
+    return constrain(x, ("batch", "seq", "embed")), aux, (k, v)
+
+
+def mamba_block(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig,
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (x, {'conv','ssm'} final states for prefill handoff)."""
+    h = norm(x, p["ln"], cfg.norm)
+    y, state = SSM.ssm_block(p["ssm"], h, cfg)
+    return constrain(x + y, ("batch", "seq", "embed")), state
+
+
+# ===========================================================================
+# Forward
+# ===========================================================================
+def _default_positions(cfg: ModelConfig, B: int, S: int,
+                       offset: int = 0) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def _embed_in(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+              rt: ModelRuntime) -> jax.Array:
+    if "embeds" in batch:
+        x = batch["embeds"].astype(rt.dtype)
+    else:
+        x = params["embed"].astype(rt.dtype)[batch["tokens"]]
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def _unembed(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    logits = x @ w
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def _maybe_remat(fn, rt: ModelRuntime):
+    if rt.remat == "none":
+        return fn
+    if rt.remat == "full":
+        return jax.checkpoint(fn,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+
+def _scan_blocks(params, cfg: ModelConfig, x, positions, rt: ModelRuntime):
+    """Scan the layer stack; returns (x, aux, per-layer cache material)."""
+    fam = cfg.family
+    zero = jnp.zeros((), jnp.float32)
+    if fam == "ssm":
+        def body_fn(xp, xs):
+            x2, state = mamba_block(xs, xp, cfg)
+            return x2, zero, state
+
+        body = _maybe_remat(body_fn, rt)
+
+        def body_scan(carry, xs):
+            x_, aux_ = carry
+            x2, a, state = body(x_, xs)
+            return (x2, aux_ + a), state
+
+        (x, aux), states = jax.lax.scan(body_scan, (x, zero),
+                                        params["blocks"],
+                                        unroll=rt.unroll_layers)
+        return x, aux, states
+    if fam == "hybrid":
+        return _hybrid_scan(params, cfg, x, positions, rt)
+
+    def body_fn(xp, xs):
+        return attn_block(xs, xp, positions, cfg, rt)
+
+    body = _maybe_remat(body_fn, rt)
+
+    def body_scan(carry, xs):
+        x_, aux_ = carry
+        x2, a, kv = body(x_, xs)
+        return (x2, aux_ + a), kv
+
+    (x, aux), kvs = jax.lax.scan(body_scan, (x, zero), params["blocks"],
+                                 unroll=rt.unroll_layers)
+    return x, aux, kvs
+
+
+def _hybrid_scan(params, cfg: ModelConfig, x, positions, rt):
+    """Zamba2: groups of ``shared_attn_period`` Mamba layers, each group
+    followed by one of the alternating shared transformer blocks."""
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    nshared = cfg.n_shared_attn_blocks
+    zero = jnp.zeros((), jnp.float32)
+
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+        params["blocks"])
+    shared = params["shared"]
+
+    def group_fn(x_, xs):
+        gparams, gidx = xs
+
+        def inner(xc, lp):
+            x2, state = mamba_block(lp, xc, cfg)
+            return x2, state
+
+        x_, states = jax.lax.scan(inner, x_, gparams,
+                                  unroll=rt.unroll_layers)
+        sel = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(
+                a, gidx % nshared, 0, keepdims=False), shared)
+        x_, aux, kv = attn_block(sel, x_, positions, cfg, rt)
+        return x_, aux, (states, kv)
+
+    body = _maybe_remat(group_fn, rt)
+
+    def scan_body(carry, xs):
+        x_, aux_ = carry
+        x2, a, cachemat = body(x_, xs)
+        return (x2, aux_ + a), cachemat
+
+    (x, aux), cachemat = jax.lax.scan(
+        scan_body, (x, zero), (grouped, jnp.arange(n_groups)),
+        unroll=rt.unroll_layers)
+    return x, aux, cachemat
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            rt: ModelRuntime = ModelRuntime()) -> Tuple[jax.Array, jax.Array]:
+    """-> (logits (B, S, V) in rt.dtype, aux_loss scalar f32)."""
+    x = _embed_in(params, cfg, batch, rt)
+    B, S, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, B, S)
+    x, aux, _ = _scan_blocks(params, cfg, x, positions, rt)
+    x = norm(x, params["final_norm"], cfg.norm)
+    return _unembed(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            rt: ModelRuntime = ModelRuntime()) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, cfg, batch, rt)
+    ce = L.cross_entropy(logits, batch["labels"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def _fill_kv_window(k_full: jax.Array, W: int) -> jax.Array:
+    """Place (B, S, Hkv, hd) prefill keys into a W-slot circular cache:
+    key at absolute position p lives in slot p % W (last W kept)."""
+    B, S = k_full.shape[:2]
+    if S <= W:
+        pad = W - S
+        return jnp.pad(k_full, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    idx = jnp.arange(S - W, S) % W
+    out = jnp.zeros((B, W) + k_full.shape[2:], k_full.dtype)
+    return out.at[:, idx].set(k_full[:, -W:])
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            max_len: int, rt: ModelRuntime = ModelRuntime(),
+            ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """One-pass prefill: returns (primed cache, last-token logits (B, V)).
+
+    The cache hands off exactly to :func:`decode_step` — validated by
+    tests/test_serve.py against token-by-token decoding.
+    """
+    x = _embed_in(params, cfg, batch, rt)
+    B, S, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, B, S)
+    x, _, cachemat = _scan_blocks(params, cfg, x, positions, rt)
+
+    W = _cache_window(cfg, max_len)
+    dtype = rt.dtype
+    fam = cfg.family
+    pos = jnp.full((B,), S, jnp.int32)
+    if fam in ("dense", "moe", "vlm", "audio"):
+        kvs = cachemat                      # (k, v): (nL, B, S, Hkv, hd)
+        k = jax.vmap(lambda t: _fill_kv_window(t, W))(kvs[0])
+        v = jax.vmap(lambda t: _fill_kv_window(t, W))(kvs[1])
+        cache = {"pos": pos, "k": k.astype(dtype), "v": v.astype(dtype)}
+    elif fam == "ssm":
+        states = cachemat                   # {'conv': (nL,B,K-1,C), 'ssm':...}
+        cache = {"pos": pos,
+                 "conv": states["conv"].astype(dtype),
+                 "ssm": states["ssm"].astype(jnp.float32)}
+    else:                                   # hybrid
+        states, kvs = cachemat
+        # states leaves: (n_groups, period, B, ...) -> (n_layers, B, ...)
+        conv = states["conv"].reshape((cfg.n_layers,)
+                                      + states["conv"].shape[2:])
+        ssm = states["ssm"].reshape((cfg.n_layers,) + states["ssm"].shape[2:])
+        k = jax.vmap(lambda t: _fill_kv_window(t, W))(kvs[0])
+        v = jax.vmap(lambda t: _fill_kv_window(t, W))(kvs[1])
+        cache = {"pos": pos, "conv": conv.astype(dtype),
+                 "ssm": ssm.astype(jnp.float32),
+                 "k": k.astype(dtype), "v": v.astype(dtype)}
+
+    x = norm(x[:, -1:, :], params["final_norm"], cfg.norm)
+    logits = _unembed(params, cfg, x)[:, 0]
+    return cache, logits
+
+
+# ===========================================================================
+# Decode (KV / state caches)
+# ===========================================================================
+def _cache_window(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+               dtype: str = "bfloat16") -> Dict[str, Tuple[Tuple, Any]]:
+    """{name: (shape, dtype)} — single source for zeros + abstract trees."""
+    hd = cfg.head_dim
+    W = _cache_window(cfg, max_len)
+    spec: Dict[str, Tuple[Tuple, Any]] = {
+        "pos": ((batch,), jnp.int32),    # per-sequence positions
+    }
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "audio"):
+        spec["k"] = ((cfg.n_layers, batch, W, cfg.n_kv_heads, hd), dtype)
+        spec["v"] = ((cfg.n_layers, batch, W, cfg.n_kv_heads, hd), dtype)
+    if fam in ("ssm", "hybrid"):
+        cs = SSM.ssm_cache_shapes(cfg, batch)
+        spec["conv"] = ((cfg.n_layers,) + cs["conv"], dtype)
+        spec["ssm"] = ((cfg.n_layers,) + cs["ssm"], "float32")
+    if fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.shared_attn_period
+        spec["k"] = ((n_groups, batch, W, cfg.n_kv_heads, hd), dtype)
+        spec["v"] = ((n_groups, batch, W, cfg.n_kv_heads, hd), dtype)
+    return spec
+
+
+CACHE_AXES = {
+    "pos": ("batch",),
+    "k": (None, "batch", "kv_seq", "kv_heads", None),
+    "v": (None, "batch", "kv_seq", "kv_heads", None),
+    "conv": (None, "batch", None, "ssm_inner"),
+    "ssm": (None, "batch", "ssm_heads", None, None),
+}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype: str = "bfloat16"):
+    return {k: jnp.zeros(s, d)
+            for k, (s, d) in cache_spec(cfg, batch, max_len, dtype).items()}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype: str = "bfloat16"):
+    return {k: jax.ShapeDtypeStruct(s, jnp.dtype(d))
+            for k, (s, d) in cache_spec(cfg, batch, max_len, dtype).items()}
+
+
+def _attn_decode_one(p, x, k_cache, v_cache, pos, cfg: ModelConfig):
+    """One-layer attention for one token. x: (B, d); pos: (B,) int32 —
+    per-sequence positions (continuous batching)."""
+    B = x.shape[0]
+    hd = cfg.head_dim
+    W = k_cache.shape[1]
+    h = norm(x, p["ln1"], cfg.norm)[:, None, :]          # (B,1,d)
+    q, k, v = _attn_proj(p, h, cfg)
+    posv = pos[:, None]                                  # (B, 1)
+    if cfg.rope == "mrope":
+        posv = jnp.broadcast_to(posv[None], (3, B, 1))
+    q, k = L.apply_rope(q, k, posv, cfg)
+    slot = (pos % W).astype(jnp.int32)                   # (B,)
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, slot].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, slot].set(v[:, 0].astype(v_cache.dtype))
+    mask = jnp.arange(W)[None, :] <= pos[:, None]        # (B, W)
+    o = decode_attention(q[:, 0], k_cache, v_cache, mask)
+    x = x + o.reshape(B, -1) @ p["wo"].astype(x.dtype)
+
+    h2 = norm(x, p["ln2"], cfg.norm)
+    if cfg.moe is not None:
+        y, _ = MOE.moe_ffn(p["moe"], h2[:, None, :], cfg, dropless=True)
+        y = y[:, 0]
+    else:
+        y = _mlp(p, h2[:, None, :], cfg)[:, 0]
+    return x + y, k_cache, v_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
+                tokens: jax.Array, rt: ModelRuntime = ModelRuntime(),
+                ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """tokens: (B,) int32 -> (new cache, logits (B, V))."""
+    pos = cache["pos"]
+    x = params["embed"].astype(rt.dtype)[tokens]          # (B, d)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        def body(x_, xs):
+            lp, kc, vc = xs
+            x2, kc, vc = _attn_decode_one(lp, x_, kc, vc, pos, cfg)
+            return x2, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]),
+            unroll=rt.unroll_layers)
+        new_cache = dict(cache, pos=pos + 1, k=k_new, v=v_new)
+    elif fam == "ssm":
+        def body(x_, xs):
+            lp, conv, ssm = xs
+            h = norm(x_, lp["ln"], cfg.norm)
+            y, st = SSM.ssm_decode_step(lp["ssm"], h, {
+                "conv": conv, "ssm": ssm}, cfg)
+            return x_ + y, (st["conv"], st["ssm"])
+
+        x, (conv_new, ssm_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["conv"], cache["ssm"]),
+            unroll=rt.unroll_layers)
+        new_cache = dict(cache, pos=pos + 1, conv=conv_new, ssm=ssm_new)
+    else:  # hybrid
+        period = cfg.shared_attn_period
+        n_groups = cfg.n_layers // period
+        nshared = cfg.n_shared_attn_blocks
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+            params["blocks"])
+        conv_g = cache["conv"].reshape((n_groups, period)
+                                       + cache["conv"].shape[1:])
+        ssm_g = cache["ssm"].reshape((n_groups, period)
+                                     + cache["ssm"].shape[1:])
+
+        def group(x_, xs):
+            gp, gidx, convs, ssms, kc, vc = xs
+
+            def inner(xc, ys):
+                lp, conv, ssm = ys
+                h = norm(xc, lp["ln"], cfg.norm)
+                y, st = SSM.ssm_decode_step(lp["ssm"], h, {
+                    "conv": conv, "ssm": ssm}, cfg)
+                return xc + y, (st["conv"], st["ssm"])
+
+            x_, (conv2, ssm2) = jax.lax.scan(inner, x_, (gp, convs, ssms),
+                                             unroll=rt.unroll_layers)
+            sel = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, gidx % nshared, 0, keepdims=False), params["shared"])
+            x_, kc, vc = _attn_decode_one(sel, x_, kc, vc, pos, cfg)
+            return x_, (conv2, ssm2, kc, vc)
+
+        x, (conv2, ssm2, k_new, v_new) = jax.lax.scan(
+            group, x, (grouped, jnp.arange(n_groups), conv_g, ssm_g,
+                       cache["k"], cache["v"]),
+            unroll=rt.unroll_layers)
+        new_cache = dict(
+            cache, pos=pos + 1,
+            conv=conv2.reshape(cache["conv"].shape),
+            ssm=ssm2.reshape(cache["ssm"].shape),
+            k=k_new, v=v_new)
+
+    x = norm(x[:, None, :], params["final_norm"], cfg.norm)
+    logits = _unembed(params, cfg, x)[:, 0]
+    return new_cache, logits

@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeEngine, Request, make_serve_step
+
+__all__ = ["ServeEngine", "Request", "make_serve_step"]

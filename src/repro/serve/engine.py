@@ -1,0 +1,121 @@
+"""Serving engine: prefill + batched decode with continuous batching.
+
+The engine holds one jointly-batched cache of ``n_slots`` sequences;
+each slot has its own position counter (``cache['pos']`` is per-
+sequence). Finished slots are refilled from the request queue by
+prefilling the new prompt (batch=1) and splicing its cache into the
+slot — insertion is a pure pytree update, so the decode step stays one
+compiled function (the 'generic reusable architecture' of serving: one
+engine, every request shape).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, prefill
+from repro.models.model import ModelRuntime
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def make_serve_step(cfg: ModelConfig, rt: ModelRuntime) -> Callable:
+    """jit-compiled one-token decode over the whole slot batch."""
+
+    def step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens, rt)
+
+    return jax.jit(step)
+
+
+def _splice(cache, single, slot: int):
+    """Insert a batch=1 prefilled cache into batch slot `slot`."""
+
+    def ins(big, small):
+        if big.ndim == 1:                       # pos (B,)
+            return big.at[slot].set(small[0])
+        # find the batch axis: caches are either (B, ...) or (L, B, ...)
+        if big.shape[0] == small.shape[0] and small.shape[1] == 1:
+            return big.at[:, slot].set(small[:, 0])
+        return big.at[slot].set(small[0])
+
+    return jax.tree.map(ins, cache, single)
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, rt: ModelRuntime,
+                 n_slots: int = 4, max_len: int = 512,
+                 greedy: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.rt = rt
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.cache = init_cache(cfg, n_slots, max_len, rt.dtype)
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.last_tokens = np.zeros((n_slots,), np.int32)
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._step = make_serve_step(cfg, rt)
+        self._prefill = jax.jit(
+            lambda p, toks: prefill(p, cfg, {"tokens": toks},
+                                    max_len, rt))
+
+    # ---------------------------------------------------------------- admin
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+                single_cache, logits = self._prefill(self.params, toks)
+                self.cache = _splice(self.cache, single_cache, slot)
+                nxt = int(jnp.argmax(logits[0])) if self.greedy else 0
+                req.out_tokens.append(nxt)
+                self.last_tokens[slot] = nxt
+                self.slots[slot] = req
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> int:
+        """One engine iteration: admit new requests, decode one token for
+        every active slot. Returns number of active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        self.cache, logits = self._step(
+            self.params, self.cache, jnp.asarray(self.last_tokens))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for slot in active:
+            req = self.slots[slot]
+            req.out_tokens.append(int(nxt[slot]))
+            self.last_tokens[slot] = nxt[slot]
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.slots[slot] = None
+        return len(active)
+
+    def run(self, max_iters: int = 1000) -> List[Request]:
+        it = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and it < max_iters:
+            self.step()
+            it += 1
+        return self.finished

@@ -1,0 +1,3 @@
+from repro.sim.simulator import simulate_pipeline, simulate_generic
+
+__all__ = ["simulate_pipeline", "simulate_generic"]

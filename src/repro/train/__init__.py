@@ -1,0 +1,12 @@
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update, lr_at
+from repro.train.loop import TrainConfig, make_train_step, train_loop
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "lr_at",
+    "TrainConfig",
+    "make_train_step",
+    "train_loop",
+]

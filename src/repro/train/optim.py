@@ -1,0 +1,96 @@
+"""AdamW with cosine and WSD (warmup-stable-decay) schedules.
+
+Hand-rolled (no optax in the offline env) and pytree-sharding friendly:
+optimizer moments inherit the parameter sharding, so ZeRO-style
+partitioning falls out of the recipe's param specs.
+
+WSD is the MiniCPM schedule [arXiv:2404.06395]: linear warmup, long
+stable plateau at peak lr, short (10%) exponential-style decay — the
+assigned minicpm-2b config selects it via ``cfg.lr_schedule``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"       # cosine | wsd | constant
+    wsd_decay_frac: float = 0.1    # MiniCPM: last 10% of steps decay
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    if cfg.schedule == "constant":
+        return cfg.peak_lr * warm
+    if cfg.schedule == "wsd":
+        decay_steps = max(1, int(cfg.total_steps * cfg.wsd_decay_frac))
+        decay_start = cfg.total_steps - decay_steps
+        frac = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        # exponential anneal peak -> min over the decay window
+        decay = jnp.power(cfg.min_lr_frac, frac)
+        return cfg.peak_lr * warm * decay
+    # cosine
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    lo = cfg.min_lr_frac
+    return cfg.peak_lr * warm * (lo + (1 - lo) * cos)
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    return {"mu": zeros(), "nu": zeros(), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state,
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** (step.astype(jnp.float32) + 1)
+    bc2 = 1 - b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * pf
+        return (pf - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    # unzip the 3-tuples
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step + 1}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

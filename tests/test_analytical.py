@@ -1,0 +1,120 @@
+"""Property + invariant tests for the paper's analytical models
+(Algorithms 1-3, Eqs. 1-11)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analytical.generic import (
+    generic_dse,
+    generic_dsp_used,
+    generic_layer_latency,
+)
+from repro.core.analytical.hybrid import hybrid_performance
+from repro.core.analytical.pipeline import (
+    allocate_compute,
+    pipeline_dsp_used,
+    pipeline_performance,
+)
+from repro.core.hardware import KU115, VU9P, ZC706
+from repro.core.workload import ConvLayer, alexnet, vgg16_conv
+
+
+# ---------------------------------------------------------------- Alg 1
+def test_alg1_respects_budget():
+    layers = vgg16_conv(224)
+    for pf in (512, 2048, 11040):
+        stages = allocate_compute(layers, pf)
+        used = sum(s.cpf * s.kpf for s in stages)
+        assert used <= pf, f"budget {pf} exceeded: {used}"
+
+
+def test_alg1_power_of_two_cpf():
+    layers = vgg16_conv(224)
+    stages = allocate_compute(layers, 4096)
+    for s in stages:
+        assert s.cpf & (s.cpf - 1) == 0      # pow2 vector width
+        assert 1 <= s.kpf <= max(1, s.layer.cout)
+
+
+@settings(max_examples=20, deadline=None)
+@given(pf=st.integers(64, 16384))
+def test_alg1_monotone_throughput(pf):
+    """More compute resources never reduce pipeline throughput."""
+    layers = alexnet(224)[:5]                # CONV trunk
+    d1 = pipeline_performance(layers, KU115, dsp_budget=pf)
+    d2 = pipeline_performance(layers, KU115, dsp_budget=2 * pf)
+    if d1.feasible and d2.feasible:
+        assert d2.gops() >= d1.gops() * 0.999
+
+
+# ---------------------------------------------------------------- Alg 2
+def test_alg2_bandwidth_fits_or_flagged():
+    layers = vgg16_conv(224)
+    d = pipeline_performance(layers, KU115)
+    total_bw = sum(s.bw_bytes for s in d.stages)
+    assert total_bw <= KU115.bw_bytes * 1.0001 or d.note == "bandwidth-bound"
+
+
+def test_alg2_column_cache_reduces_traffic():
+    l = ConvLayer("c", 56, 56, 256, 256, 3, 3)
+    from repro.core.analytical.pipeline import StageConfig
+    s1 = StageConfig(l, cpf=64, kpf=8, col=1)
+    s2 = StageConfig(l, cpf=64, kpf=8, col=4)
+    assert s2.weight_stream_bytes_per_image(16) \
+        < s1.weight_stream_bytes_per_image(16)
+
+
+# ---------------------------------------------------------------- Alg 3
+def test_generic_dse_fits_dsp():
+    layers = vgg16_conv(224)
+    d = generic_dse(layers, VU9P)
+    assert generic_dsp_used(d, VU9P) <= VU9P.dsp
+
+
+@settings(max_examples=15, deadline=None)
+@given(fm=st.sampled_from([28, 56, 112]),
+       cin=st.sampled_from([64, 128, 256]),
+       k=st.sampled_from([1, 3, 5]))
+def test_generic_latency_positive_and_dataflow_valid(fm, cin, k):
+    layer = ConvLayer("x", fm, fm, cin, cin, k, k)
+    d = generic_dse([layer], VU9P)
+    assert d.layer_latencies[0] > 0
+    assert d.dataflows[0] in ("IS", "WS")
+
+
+def test_is_ws_latency_formulas():
+    """Eq. 8 vs Eq. 10: for huge weights + tiny ifm, WS must win;
+    for tiny weights + huge ifm re-reads, IS must win."""
+    from repro.core.analytical.generic import GenericHWParams
+    hw = GenericHWParams(64, 64, 1e6, 1e6, 1e6, 1e9, 1e9, 1e9)
+    fc = ConvLayer("fc", 1, 1, 4096, 4096, 1, 1, pad=0)    # big weights
+    lat, df = generic_layer_latency(fc, hw, 2e8, 16, 16, batch=8)
+    assert df == "WS"
+    conv = ConvLayer("c", 112, 112, 64, 64, 3, 3)          # small weights
+    lat, df = generic_layer_latency(conv, hw, 2e8, 16, 16, batch=1)
+    assert df == "IS"
+
+
+# ---------------------------------------------------------------- hybrid
+def test_hybrid_covers_all_layers():
+    layers = vgg16_conv(224)
+    for sp in (0, 4, len(layers)):
+        d = hybrid_performance(layers, KU115, sp)
+        n_pipe = len(d.pipeline.stages) if d.pipeline else 0
+        n_gen = len(d.generic.layer_latencies) if d.generic else 0
+        assert n_pipe + n_gen == len(layers)
+
+
+def test_hybrid_resource_budget():
+    layers = vgg16_conv(224)
+    d = hybrid_performance(layers, KU115, sp=6)
+    assert d.dsp_used() <= KU115.dsp * 1.0001
+
+
+def test_dsp_efficiency_bounded():
+    layers = vgg16_conv(224)
+    d = pipeline_performance(layers, KU115)
+    from repro.core.analytical.pipeline import pipeline_dsp_efficiency
+    eff = pipeline_dsp_efficiency(d, KU115)
+    assert 0.0 < eff <= 1.0001

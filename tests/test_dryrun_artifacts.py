@@ -1,0 +1,57 @@
+"""Dry-run artifact contract (deliverable e): all 80 cells present,
+parse, none FAILed, skips exactly match the assignment rules, roofline
+terms populated, and memory fits per chip for serving cells."""
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, get_shape, \
+    shape_skip_reason
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(ART),
+    reason="dry-run artifacts not generated (run repro.launch.dryrun)")
+
+
+def _load(arch, shape, mesh):
+    path = os.path.join(ART, f"{arch}__{shape}__{mesh}.json")
+    assert os.path.exists(path), f"missing cell artifact {path}"
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_cell_artifact_contract(arch, shape, mesh):
+    art = _load(arch, shape, mesh)
+    want_skip = shape_skip_reason(get_arch(arch), get_shape(shape))
+    if want_skip:
+        assert art["status"] == "SKIP"
+        assert art["reason"] == want_skip
+        return
+    assert art["status"] == "OK", art.get("error")
+    assert art["devices"] == (512 if mesh == "multi" else 256)
+    r = art["roofline"]
+    for term in ("compute_s", "memory_s", "collective_s"):
+        assert r[term] >= 0.0
+    assert r["dominant"] in ("compute_s", "memory_s", "collective_s")
+    assert r["model_flops"] > 0
+    # serving cells: bf16 weights + cache must fit per-chip HBM
+    if get_shape(shape).kind in ("decode",):
+        args = art["memory"]["argument_bytes"]
+        assert args < 16 * 2**30, \
+            f"{arch}/{shape}/{mesh}: {args/2**30:.1f} GiB args > HBM"
+
+
+def test_counts():
+    names = [n for n in os.listdir(ART) if n.endswith(".json")]
+    assert len(names) == 80
+    stats = {"OK": 0, "SKIP": 0, "FAIL": 0}
+    for n in names:
+        with open(os.path.join(ART, n)) as f:
+            stats[json.load(f)["status"]] += 1
+    assert stats == {"OK": 64, "SKIP": 16, "FAIL": 0}

@@ -1,0 +1,101 @@
+"""DSE engine tests: PSO determinism, hybrid dominance, TPU-plan
+feasibility constraints."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, get_shape
+from repro.core.analytical.tpu_model import (
+    ShardPlan,
+    TPUPlan,
+    analyze,
+    hbm_footprint,
+)
+from repro.core.dse.engine import benchmark_paradigm, explore_fpga
+from repro.core.dse.pso import particle_swarm
+from repro.core.dse.tpu_engine import explore_tpu
+from repro.core.hardware import KU115, TPU_V5E
+from repro.core.workload import alexnet, vgg16_conv
+
+
+def test_pso_deterministic():
+    f = lambda p: -float(((p - 3.0) ** 2).sum())
+    r1 = particle_swarm(f, [0, 0], [10, 10], [False, False], seed=7)
+    r2 = particle_swarm(f, [0, 0], [10, 10], [False, False], seed=7)
+    assert np.allclose(r1.best_position, r2.best_position)
+    assert r1.best_fitness == r2.best_fitness
+
+
+def test_pso_finds_quadratic_optimum():
+    f = lambda p: -float(((p - 3.0) ** 2).sum())
+    r = particle_swarm(f, [0, 0], [10, 10], [False, False],
+                       n_particles=20, n_iters=30, seed=0)
+    assert np.allclose(r.best_position, [3.0, 3.0], atol=0.3)
+
+
+def test_pso_history_monotone():
+    f = lambda p: float(p[0]) - float(p[1]) ** 2
+    r = particle_swarm(f, [0, 0], [5, 5], [False, False], seed=1)
+    assert all(b >= a - 1e-12 for a, b in zip(r.history, r.history[1:]))
+
+
+def test_hybrid_dse_dominates_pure_paradigms():
+    """Paradigm 3 contains paradigms 1 and 2 as corner points, so the
+    warm-started search must never lose to them."""
+    layers = vgg16_conv(224)
+    p1 = benchmark_paradigm(layers, KU115, 1, batch=1).gops
+    p2 = benchmark_paradigm(layers, KU115, 2, batch=1).gops
+    res = explore_fpga(layers, KU115, batch=1, fix_batch=True,
+                       n_particles=12, n_iters=10)
+    assert res.best_design.gops() >= 0.99 * max(p1, p2)
+
+
+def test_deeper_dnn_hybrid_beats_pipeline():
+    """The paper's scalability claim: on the 38-layer VGG-like model the
+    hybrid is far ahead of the pure pipeline."""
+    layers = vgg16_conv(224, extra_per_group=5)
+    p1 = benchmark_paradigm(layers, KU115, 1, batch=1).gops
+    p3 = benchmark_paradigm(layers, KU115, 3, batch=1).gops
+    assert p3 >= 3.0 * p1
+
+
+# ---------------------------------------------------------------- TPU DSE
+def test_tpu_plan_hbm_gate():
+    cfg = get_arch("mixtral-8x22b")
+    shape = get_shape("train_4k")
+    tight = TPUPlan(0, ShardPlan("WS", "heads", 16),
+                    ShardPlan("WS", "heads", 16), 1, "none", 16, 1)
+    foot = hbm_footprint(cfg, shape, tight)
+    assert not foot["fits"]          # 141B params WS + no microbatching
+
+
+def test_tpu_dse_respects_constraints():
+    cfg = get_arch("minicpm-2b")
+    shape = get_shape("train_4k")
+    res = explore_tpu(cfg, shape, n_particles=8, n_iters=8)
+    assert res.best_fitness > 0
+    plan = res.best_plan
+    assert shape.global_batch % plan.microbatches == 0
+    assert hbm_footprint(cfg, shape, plan)["fits"]
+
+
+def test_tpu_analysis_terms_positive():
+    cfg = get_arch("chatglm3-6b")
+    for sh in ("train_4k", "prefill_32k", "decode_32k"):
+        shape = get_shape(sh)
+        plan = TPUPlan(0, ShardPlan(), ShardPlan(),
+                       8 if sh == "train_4k" else 1, "full", 16, 1)
+        a = analyze(cfg, shape, plan)
+        assert a.compute_s > 0 and a.memory_s > 0
+        assert a.step_s >= max(a.compute_s, a.memory_s, a.collective_s)
+
+
+def test_tpu_microbatching_trades_memory():
+    """More microbatches -> smaller activation carries (the BRAM<->BW
+    trade in TPU form)."""
+    cfg = get_arch("mixtral-8x22b")
+    shape = get_shape("train_4k")
+    f1 = hbm_footprint(cfg, shape, TPUPlan(
+        0, ShardPlan("IS"), ShardPlan("IS"), 1, "full", 16, 1))
+    f8 = hbm_footprint(cfg, shape, TPUPlan(
+        0, ShardPlan("IS"), ShardPlan("IS"), 8, "full", 16, 1))
+    assert f8["act_carries"] < f1["act_carries"]

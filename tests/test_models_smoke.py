@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned arch instantiates a REDUCED same-family config and runs
+one forward + one train-grad step on CPU, asserting output shapes and
+finite values; decode-capable archs also check prefill==decode logits.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+)
+from repro.models.model import ModelRuntime
+
+RT = ModelRuntime(dtype="float32", remat="none", attn_chunk=8,
+                  moe_dropless=True)
+B, S = 2, 24
+
+
+def _batch(cfg, key):
+    labels = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.frontend == "token":
+        toks = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0,
+                                  cfg.vocab_size)
+        return {"tokens": toks, "labels": labels}
+    emb = jax.random.normal(jax.random.fold_in(key, 2), (B, S, cfg.d_model))
+    return {"embeds": emb, "labels": labels}
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_finite(arch, key):
+    cfg = smoke_config(ARCHS[arch])
+    params = init_params(key, cfg)
+    batch = _batch(cfg, key)
+    logits, aux = forward(params, cfg, batch, RT)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_grad_step(arch, key):
+    cfg = smoke_config(ARCHS[arch])
+    params = init_params(key, cfg)
+    batch = _batch(cfg, key)
+
+    def loss(p):
+        l, _ = loss_fn(p, cfg, batch, RT)
+        return l
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert bool(jnp.isfinite(val))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0.0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_matches_forward(arch, key):
+    cfg = smoke_config(ARCHS[arch])
+    if cfg.is_encoder_only:
+        pytest.skip("encoder-only: no decode step")
+    if cfg.frontend != "token":
+        # backbone decodes text tokens after the (stubbed) frontend prefill
+        pass
+    params = init_params(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits_full, _ = forward(params, cfg, {"tokens": toks}, RT)
+    cache = init_cache(cfg, B, S, "float32")
+    outs = []
+    for t in range(S):
+        cache, lg = decode_step(params, cfg, cache, toks[:, t], RT)
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(logits_full - logits_dec))
+                / jnp.max(jnp.abs(logits_full)))
+    assert rel < 1e-3, f"{arch}: prefill/decode mismatch rel={rel}"
+
+
+def test_sliding_window_decode_consistency(key):
+    """Mixtral SWA: decode via circular cache == forward with window mask
+    once S exceeds the window."""
+    cfg = smoke_config(ARCHS["mixtral-8x22b"])  # window = 32
+    assert cfg.sliding_window == 32
+    S_long = 48
+    params = init_params(key, cfg)
+    toks = jax.random.randint(key, (B, S_long), 0, cfg.vocab_size)
+    logits_full, _ = forward(params, cfg, {"tokens": toks}, RT)
+    cache = init_cache(cfg, B, S_long, "float32")
+    assert cache["k"].shape[2] == cfg.sliding_window  # circular window
+    outs = []
+    for t in range(S_long):
+        cache, lg = decode_step(params, cfg, cache, toks[:, t], RT)
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(logits_full - logits_dec))
+                / jnp.max(jnp.abs(logits_full)))
+    assert rel < 1e-3, f"SWA circular-cache mismatch rel={rel}"

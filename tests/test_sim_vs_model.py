@@ -1,0 +1,46 @@
+"""Fig. 4/5 invariant: analytic models agree with the independent event
+simulator within the paper's error band."""
+import pytest
+
+from repro.core.analytical.generic import generic_dse
+from repro.core.analytical.pipeline import pipeline_performance
+from repro.core.hardware import KU115, VU9P, ZC706
+from repro.core.workload import (
+    ConvLayer,
+    alexnet,
+    resnet18,
+    vgg16_conv,
+    yolo_tiny,
+    zfnet,
+)
+from repro.sim.simulator import simulate_generic, simulate_pipeline
+
+PIPE_CASES = [
+    ("vgg16", vgg16_conv, 224, KU115, 1),
+    ("alexnet", alexnet, 224, KU115, 1),
+    ("alexnet", alexnet, 224, KU115, 8),
+    ("zf", zfnet, 224, ZC706, 1),
+    ("yolo", yolo_tiny, 448, ZC706, 1),
+    ("resnet18", resnet18, 224, KU115, 4),
+]
+
+
+@pytest.mark.parametrize("name,fn,sz,spec,batch", PIPE_CASES)
+def test_pipeline_model_matches_sim(name, fn, sz, spec, batch):
+    d = pipeline_performance(fn(sz), spec, batch=batch)
+    if not d.feasible:
+        pytest.skip("infeasible on this board")
+    s = simulate_pipeline(d, spec)
+    err = abs(d.gops() - s.gops) / s.gops
+    assert err < 0.05, f"{name}: {err*100:.1f}% > 5%"
+
+
+@pytest.mark.parametrize("fm", [56, 224])
+@pytest.mark.parametrize("ch", [64, 512])
+@pytest.mark.parametrize("k", [1, 3])
+def test_generic_model_matches_sim(fm, ch, k):
+    layer = ConvLayer("c", fm, fm, ch, ch, k, k)
+    d = generic_dse([layer], VU9P)
+    s = simulate_generic(d, VU9P)
+    err = abs(d.gops() - s.gops) / s.gops
+    assert err < 0.08, f"{err*100:.1f}% > 8%"
