@@ -11,7 +11,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="fewer DSE cases for fig8/9")
+                    help="fewer DSE cases for fig8/9, smaller fig11 swarm")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
     args = ap.parse_args()
@@ -29,6 +29,7 @@ def main() -> None:
     )
 
     n_cases = 6 if args.quick else 12
+    fig11_kw = ({"n_particles": 12, "n_iters": 12} if args.quick else {})
     benches = [
         ("fig4", lambda: fig4_pipeline_model_error.run()),
         ("fig5", lambda: fig5_generic_model_error.run()),
@@ -36,13 +37,17 @@ def main() -> None:
         ("fig8", lambda: fig8_dsp_efficiency.run(n_cases)),
         ("fig9", lambda: fig9_resource_split.run(n_cases)),
         ("fig10", lambda: fig10_scalability.run()),
-        ("fig11", lambda: fig11_dse_convergence.run()),
+        ("fig11", lambda: fig11_dse_convergence.run(**fig11_kw)),
         ("roofline_single", lambda: roofline_table.run("single")),
         ("roofline_multi", lambda: roofline_table.run("multi")),
         ("tpu_model", lambda: tpu_model_error.run()),
     ]
     if args.only:
         names = set(args.only.split(","))
+        unknown = names - {n for n, _ in benches}
+        if unknown:
+            sys.exit(f"unknown benchmark(s): {sorted(unknown)}; "
+                     f"available: {[n for n, _ in benches]}")
         benches = [(n, f) for n, f in benches if n in names]
 
     results = {}

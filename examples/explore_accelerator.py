@@ -2,14 +2,16 @@
 
 Reproduces the scalability experiment (Fig. 10) and one DSE trace
 (Fig. 11) interactively, then runs the TPU-domain DSE across three
-assigned architectures to show how the same two-level search adapts
-plans per family (dense vs MoE vs SSM).
+assigned architectures — both explorers now drive the same
+``AcceleratorModel`` + ``DesignSpace`` search core, so the FPGA and
+TPU sections differ only in which model/space they hand it. Each
+search also prints its memo-cache savings and the (throughput,
+latency, efficiency) Pareto frontier.
 
     PYTHONPATH=src python examples/explore_accelerator.py
 """
 from repro.configs import get_arch, get_shape
-from repro.core.dse.engine import benchmark_paradigm, explore_fpga
-from repro.core.dse.tpu_engine import explore_tpu
+from repro.core.dse import benchmark_paradigm, explore_fpga, explore_tpu
 from repro.core.hardware import KU115
 from repro.core.workload import vgg16_conv
 
@@ -27,6 +29,15 @@ res = explore_fpga(vgg16_conv(224), KU115, n_particles=16, n_iters=12)
 for i, (g, sp, b) in enumerate(zip(res.gops_trace, res.sp_trace,
                                    res.batch_trace)):
     print(f"  iter {i:2d}: best {g:7.1f} GOP/s  (SP={sp}, batch={b})")
+s = res.search
+print(f"  cache: {s.unique_evaluations} unique analytical evals for "
+      f"{s.calls} fitness calls ({s.cache_hits} hits)")
+print("  pareto frontier (throughput imgs/s, latency s, dsp-eff):")
+for e in sorted(res.pareto, key=lambda e: -e.result.throughput)[:5]:
+    r = e.result
+    print(f"    SP={int(e.point['sp']):2d} batch={int(e.point['batch']):2d}"
+          f"  thr={r.throughput:9.1f}  lat={r.latency_s * 1e3:7.2f} ms"
+          f"  eff={r.efficiency:.3f}")
 
 print("\n== TPU DSE across architecture families ==")
 for arch in ("stablelm-12b", "mixtral-8x22b", "mamba2-1.3b"):
@@ -34,6 +45,9 @@ for arch in ("stablelm-12b", "mixtral-8x22b", "mamba2-1.3b"):
     shape = get_shape("train_4k")
     t = explore_tpu(cfg, shape, n_particles=10, n_iters=10)
     a = t.best_analysis
+    s = t.search
     print(f"  {arch:16s}: M={t.best_plan.microbatches:2d} "
           f"front={t.best_plan.front.dataflow}/{t.best_plan.front.attn_mode} "
-          f"dom={a.dominant:12s} roofline~{t.best_fitness:.3f}")
+          f"dom={a.dominant:12s} roofline~{t.best_fitness:.3f} "
+          f"(cache {s.cache_hits}/{s.calls} hits, "
+          f"pareto {len(t.pareto)})")

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 
 def _leaf_files(tree) -> Dict[str, Any]:
-    flat = jax.tree.flatten_with_path(tree)[0]
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
         key = jax.tree_util.keystr(path)
@@ -76,7 +76,7 @@ def restore(directory: str, step: int, like) -> Any:
     assert os.path.exists(os.path.join(path, "_COMPLETE")), \
         f"incomplete checkpoint at {path}"
     files = _leaf_files(like)
-    flat, treedef = jax.tree.flatten_with_path(like)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for fpath, leaf in flat:
         key = jax.tree_util.keystr(fpath)
@@ -95,7 +95,7 @@ def restore_elastic(directory: str, step: int, like, shardings) -> Any:
     of NamedShardings for the *new* mesh (from the re-planned recipe)."""
     path = os.path.join(directory, f"step_{step:08d}")
     assert os.path.exists(os.path.join(path, "_COMPLETE"))
-    flat, treedef = jax.tree.flatten_with_path(like)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     shard_leaves = jax.tree.leaves(shardings)
     leaves = []
     for (fpath, _), sh in zip(flat, shard_leaves):

@@ -1,26 +1,45 @@
+from repro.core.analytical.interface import (
+    AcceleratorModel,
+    DesignPoint,
+    EvalResult,
+)
 from repro.core.analytical.pipeline import (
     PipelineDesign,
+    PipelineModel,
     allocate_compute,
     allocate_bandwidth,
     pipeline_performance,
 )
 from repro.core.analytical.generic import (
     GenericDesign,
+    GenericModel,
     generic_layer_latency,
     generic_dse,
     generic_performance,
 )
-from repro.core.analytical.hybrid import HybridDesign, hybrid_performance
+from repro.core.analytical.hybrid import (
+    HybridDesign,
+    HybridModel,
+    hybrid_performance,
+)
+from repro.core.analytical.tpu_model import TPUModel
 
 __all__ = [
+    "AcceleratorModel",
+    "DesignPoint",
+    "EvalResult",
     "PipelineDesign",
+    "PipelineModel",
     "allocate_compute",
     "allocate_bandwidth",
     "pipeline_performance",
     "GenericDesign",
+    "GenericModel",
     "generic_layer_latency",
     "generic_dse",
     "generic_performance",
     "HybridDesign",
+    "HybridModel",
     "hybrid_performance",
+    "TPUModel",
 ]

@@ -215,6 +215,44 @@ def generic_performance(layers, spec, batch=1, wbits=16, abits=16,
     return generic_dse(layers, spec, batch, wbits, abits, **budgets)
 
 
+class GenericModel:
+    """Paradigm 2 behind the shared :class:`AcceleratorModel` protocol.
+
+    Knobs: ``batch``. Algorithm 3 (STEP1-3) runs inside ``evaluate``.
+    """
+
+    name = "generic"
+
+    def __init__(self, layers: Sequence[ConvLayer], spec: FPGASpec,
+                 wbits: int = 16, abits: int = 16):
+        self.layers = list(layers)
+        self.spec = spec
+        self.wbits = wbits
+        self.abits = abits
+
+    def evaluate(self, point) -> "EvalResult":
+        from repro.core.analytical.interface import EvalResult
+
+        batch = max(1, int(point.get("batch", 1)))
+        d = generic_dse(self.layers, self.spec, batch,
+                        self.wbits, self.abits)
+        if not d.feasible:
+            return EvalResult.infeasible("no hardware point fits budget",
+                                         detail=d)
+        thr = d.throughput_imgs(batch)
+        hw = d.hw
+        return EvalResult(
+            gops=d.gops(batch),
+            throughput=thr,
+            latency_s=batch / thr if thr > 0 else float("inf"),
+            efficiency=generic_dsp_efficiency(d, self.spec, batch),
+            resources={"dsp": generic_dsp_used(d, self.spec),
+                       "bram_bytes": hw.cap_fbuf + hw.cap_wbuf
+                       + hw.cap_abuf,
+                       "bw_bytes": hw.bw_w + hw.bw_ifm + hw.bw_ofm},
+            detail=d)
+
+
 def generic_dsp_used(design: GenericDesign, spec: FPGASpec) -> float:
     return design.hw.cpf * design.hw.kpf / spec.macs_per_dsp(design.wbits)
 

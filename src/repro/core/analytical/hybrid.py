@@ -129,3 +129,52 @@ def hybrid_performance(
     feasible = ((pipe is None or pipe.feasible)
                 and (gen is None or gen.feasible))
     return HybridDesign(sp, batch, pipe, gen, spec, wbits, abits, feasible)
+
+
+class HybridModel:
+    """Paradigm 3 behind the shared :class:`AcceleratorModel` protocol.
+
+    Knobs = the paper's RAV: ``sp``, ``batch``, ``dsp_p``, ``bram_p``,
+    ``bw_p`` (Table 1). ``evaluate`` runs the full level-2 optimization
+    (Algs 1+2 for the pipeline front, Alg 3 for the generic tail) —
+    this is the fitness function of the two-level DSE.
+    """
+
+    name = "hybrid"
+
+    def __init__(self, layers: Sequence[ConvLayer], spec: FPGASpec,
+                 wbits: int = 16, abits: int = 16):
+        self.layers = list(layers)
+        self.spec = spec
+        self.wbits = wbits
+        self.abits = abits
+
+    def evaluate(self, point) -> "EvalResult":
+        from repro.core.analytical.interface import EvalResult
+
+        dsp_p = point.get("dsp_p")
+        d = hybrid_performance(
+            self.layers, self.spec,
+            sp=int(point["sp"]),
+            batch=max(1, int(point.get("batch", 1))),
+            dsp_p=int(dsp_p) if dsp_p is not None else None,
+            bram_p=point.get("bram_p"),
+            bw_p=point.get("bw_p"),
+            wbits=self.wbits, abits=self.abits)
+        if not d.feasible:
+            why = []
+            if d.pipeline is not None and not d.pipeline.feasible:
+                why.append(f"pipeline: {d.pipeline.note}")
+            if d.generic is not None and not d.generic.feasible:
+                why.append("generic: no hardware point fits budget")
+            return EvalResult.infeasible("; ".join(why) or "infeasible",
+                                         detail=d)
+        thr = d.throughput_imgs()
+        return EvalResult(
+            gops=d.gops(),
+            throughput=thr,
+            latency_s=d.batch / thr if thr > 0 else float("inf"),
+            efficiency=d.dsp_efficiency(),
+            resources={"dsp": d.dsp_used(),
+                       "bram_bytes": d.bram_used()},
+            detail=d)

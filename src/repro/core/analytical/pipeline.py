@@ -335,6 +335,43 @@ def pipeline_dsp_used(design: PipelineDesign, spec: FPGASpec) -> float:
     return sum(s.pf for s in design.stages) / spec.macs_per_dsp(design.wbits)
 
 
+class PipelineModel:
+    """Paradigm 1 behind the shared :class:`AcceleratorModel` protocol.
+
+    Knobs: ``batch``. Everything else is resolved internally by
+    Algorithms 1+2 — the level-2 optimization runs inside ``evaluate``.
+    """
+
+    name = "pipeline"
+
+    def __init__(self, layers: Sequence[ConvLayer], spec: FPGASpec,
+                 wbits: int = 16, abits: int = 16):
+        self.layers = list(layers)
+        self.spec = spec
+        self.wbits = wbits
+        self.abits = abits
+
+    def evaluate(self, point) -> "EvalResult":
+        from repro.core.analytical.interface import EvalResult
+
+        batch = max(1, int(point.get("batch", 1)))
+        d = pipeline_performance(self.layers, self.spec, batch,
+                                 self.wbits, self.abits)
+        if not d.feasible:
+            return EvalResult.infeasible(d.note or "pipeline infeasible",
+                                         detail=d)
+        thr = d.throughput_imgs(batch)
+        return EvalResult(
+            gops=d.gops(batch),
+            throughput=thr,
+            latency_s=batch / thr if thr > 0 else float("inf"),
+            efficiency=pipeline_dsp_efficiency(d, self.spec, batch),
+            resources={"dsp": pipeline_dsp_used(d, self.spec),
+                       "bram_bytes": d.bram_bytes(),
+                       "bw_bytes": sum(s.bw_bytes for s in d.stages)},
+            detail=d)
+
+
 def pipeline_dsp_efficiency(design: PipelineDesign, spec: FPGASpec,
                             batch: int = 1) -> float:
     """Eq. 11 with DSP_allocated."""

@@ -167,6 +167,91 @@ def analyze(cfg: ModelConfig, shape: ShapeConfig, plan: TPUPlan,
     return TPUAnalysis(comp, mem, coll, per_op)
 
 
+class TPUModel:
+    """TPU-pod domain behind the shared :class:`AcceleratorModel`
+    protocol.
+
+    Knobs = the RAV-equivalent of the two-level TPU DSE: ``sp`` (layers
+    on the *front* recipe), ``log2_m`` (gradient-accumulation
+    microbatches, the BRAM<->BW trade), ``front_is`` / ``tail_is``
+    (>= 0.5 means IS / weights-streamed dataflow for that section).
+    Level-2 details (attention mode by divisibility) are resolved in
+    :meth:`plan_for`; infeasible plans (HBM overflow, indivisible
+    microbatching) come back as ``EvalResult.infeasible`` — the paper's
+    resource-budget constraints.
+    """
+
+    name = "tpu"
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 dp: int = 16, model_axis: int = 16, pods: int = 1,
+                 chip: TPUSpec = TPU_V5E,
+                 flops_calibration: float = 1.0):
+        self.cfg = cfg
+        self.shape = shape
+        self.dp = dp
+        self.model_axis = model_axis
+        self.pods = pods
+        self.chip = chip
+        self.flops_calibration = flops_calibration
+        self._model_flops = model_flops(cfg, shape)
+
+    @property
+    def chips(self) -> int:
+        return self.dp * self.model_axis * self.pods
+
+    def plan_for(self, point) -> TPUPlan:
+        cfg = self.cfg
+        sp = int(min(max(point["sp"], 0), cfg.n_layers))
+        m = 2 ** int(min(max(point.get("log2_m", 0), 0), 6))
+        front_df = "IS" if point.get("front_is", 1) >= 0.5 else "WS"
+        tail_df = "IS" if point.get("tail_is", 1) >= 0.5 else "WS"
+        attn = "heads" if cfg.n_heads % self.model_axis == 0 else "seq"
+        return TPUPlan(
+            sp=sp,
+            front=ShardPlan(front_df, attn, self.model_axis),
+            tail=ShardPlan(tail_df, attn, self.model_axis),
+            microbatches=m, remat="full", dp=self.dp, pods=self.pods)
+
+    def evaluate(self, point) -> "EvalResult":
+        from repro.core.analytical.interface import EvalResult
+
+        plan = self.plan_for(point)
+        if self.shape.kind == "train":
+            gb = self.shape.global_batch
+            if gb % plan.microbatches \
+                    or (gb // plan.microbatches) % self.dp:
+                return EvalResult.infeasible(
+                    f"microbatches={plan.microbatches} indivisible for "
+                    f"global_batch={gb}, dp={self.dp}")
+        elif plan.microbatches != 1:
+            return EvalResult.infeasible(
+                "microbatching only applies to training")
+        foot = hbm_footprint(self.cfg, self.shape, plan, self.chip)
+        if not foot["fits"]:
+            return EvalResult.infeasible(
+                f"HBM overflow: {foot['total'] / 1e9:.1f} GB "
+                f"> {self.chip.hbm_bytes / 1e9:.1f} GB per chip",
+                detail=foot)
+        ana = analyze(self.cfg, self.shape, plan, self.chip,
+                      self.flops_calibration)
+        if ana.step_s <= 0:
+            return EvalResult.infeasible("degenerate step time",
+                                         detail=ana)
+        frac = (self._model_flops / ana.step_s) \
+            / (self.chips * self.chip.peak_flops())
+        return EvalResult(
+            gops=self._model_flops / ana.step_s / 1e9,
+            throughput=1.0 / ana.step_s,          # steps/s
+            latency_s=ana.step_s,
+            efficiency=frac,                      # roofline fraction
+            resources={"hbm_bytes": foot["total"],
+                       "compute_s": ana.compute_s,
+                       "memory_s": ana.memory_s,
+                       "collective_s": ana.collective_s},
+            detail=ana)
+
+
 def hbm_footprint(cfg: ModelConfig, shape: ShapeConfig, plan: TPUPlan,
                   chip: TPUSpec = TPU_V5E) -> Dict[str, float]:
     """Per-chip HBM residency (params/opt/grads/activation carries/KV),

@@ -1,14 +1,40 @@
+from repro.core.dse.space import DesignSpace, Dimension
+from repro.core.dse.pareto import (
+    DEFAULT_OBJECTIVES,
+    Objective,
+    ParetoFront,
+)
+from repro.core.dse.search import (
+    STRATEGIES,
+    CachedEvaluator,
+    EvolutionaryStrategy,
+    PSOStrategy,
+    RandomLocalRefineStrategy,
+    SearchResult,
+    SearchStrategy,
+    run_search,
+)
 from repro.core.dse.pso import PSOResult, particle_swarm
 from repro.core.dse.engine import (
     FPGAExploreResult,
-    explore_fpga,
     benchmark_paradigm,
+    explore_fpga,
+    fpga_design_space,
+)
+from repro.core.dse.tpu_engine import (
+    TPUExploreResult,
+    explore_tpu,
+    tpu_design_space,
 )
 
 __all__ = [
-    "PSOResult",
-    "particle_swarm",
-    "FPGAExploreResult",
-    "explore_fpga",
+    "DesignSpace", "Dimension",
+    "Objective", "ParetoFront", "DEFAULT_OBJECTIVES",
+    "SearchStrategy", "PSOStrategy", "EvolutionaryStrategy",
+    "RandomLocalRefineStrategy", "STRATEGIES",
+    "CachedEvaluator", "SearchResult", "run_search",
+    "PSOResult", "particle_swarm",
+    "FPGAExploreResult", "explore_fpga", "fpga_design_space",
     "benchmark_paradigm",
+    "TPUExploreResult", "explore_tpu", "tpu_design_space",
 ]

@@ -1,85 +1,108 @@
-"""Two-level DSE engine (paper §5.3) — FPGA domain.
+"""Two-level DSE — FPGA domain, as a thin adapter over the shared
+search core (paper §5.3).
 
-Level 1: PSO (Algorithm 4) over RAV = [SP, Batch, DSP_p, BRAM_p, BW_p].
-Level 2: inside the fitness function, Algorithms 1+2 configure the
-pipeline section and Algorithm 3 configures the generic section.
-Fitness = analytic throughput (GOP/s).
+Level 1: a pluggable strategy (default: PSO, Algorithm 4) over the
+RAV = [SP, Batch, DSP_p, BRAM_p, BW_p] described as a
+:class:`DesignSpace`. Level 2: inside :class:`HybridModel.evaluate`,
+Algorithms 1+2 configure the pipeline section and Algorithm 3 the
+generic section. Fitness = analytic throughput (GOP/s); the search also
+reports the (throughput, latency, efficiency) Pareto frontier and the
+memo-cache accounting.
 
-The TPU-domain engine lives in ``repro.core.analytical.tpu_model`` /
-``repro.core.dse.tpu_engine`` with the same two-level structure.
+The TPU-domain twin (`repro.core.dse.tpu_engine`) adapts the same core
+to sharding plans.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.analytical.generic import generic_dse, generic_dsp_efficiency
-from repro.core.analytical.hybrid import HybridDesign, hybrid_performance
-from repro.core.analytical.pipeline import (
-    pipeline_dsp_efficiency,
-    pipeline_performance,
-)
-from repro.core.dse.pso import PSOResult, particle_swarm
+from repro.core.analytical.generic import GenericModel
+from repro.core.analytical.hybrid import HybridDesign, HybridModel
+from repro.core.analytical.interface import DesignPoint, EvalResult
+from repro.core.analytical.pipeline import PipelineModel
+from repro.core.dse.pareto import ParetoFront
+from repro.core.dse.search import SearchResult, SearchStrategy, run_search
+from repro.core.dse.space import DesignSpace, Dimension
 from repro.core.hardware import FPGASpec
-from repro.core.workload import ConvLayer, total_ops
+from repro.core.workload import ConvLayer
 
 
-@dataclass
-class ParadigmReport:
-    paradigm: int
-    gops: float
-    dsp_eff: float
-    throughput_imgs: float
-    detail: object = None
+def fpga_design_space(layers: Sequence[ConvLayer], spec: FPGASpec,
+                      batch: Optional[int] = None,
+                      max_batch: int = 32) -> DesignSpace:
+    """Table-1 design space. A fixed batch becomes a degenerate
+    (lo == hi) dimension, so every strategy honors it for free."""
+    n = len(layers)
+    b_lo, b_hi = (batch, batch) if batch is not None else (1, max_batch)
+    # Partition knobs are lattice-quantized: DSP in column-group
+    # slices, BRAM in 16-block groups, bandwidth in 1/64 shares.
+    # Physically honest (placement granularity is far coarser than a
+    # single DSP/byte) — the level-2 allocators re-flow whatever the
+    # partition gives them — and the lattice is what makes the memo
+    # cache bite once the swarm converges.
+    return DesignSpace.of([
+        Dimension("sp", 0, n, integer=True),
+        Dimension("batch", b_lo, b_hi, integer=True),
+        Dimension("dsp_p", 0, spec.dsp, integer=True),
+        Dimension("bram_p", 0.0, spec.bram_bytes, step=36 * 1024 / 8),
+        Dimension("bw_p", 0.05 * spec.bw_bytes, 0.95 * spec.bw_bytes,
+                  step=spec.bw_bytes / 512),
+    ])
 
 
-def benchmark_paradigm(
-    layers: Sequence[ConvLayer],
-    spec: FPGASpec,
-    paradigm: int,
-    batch: int = 1,
-    wbits: int = 16,
-    abits: int = 16,
-    sp: Optional[int] = None,
-    seed: int = 0,
-) -> ParadigmReport:
-    """Benchmark one paradigm after its respective optimization (paper §4).
-
-    paradigm 3 runs the two-level DSE (a small exploration unless the
-    caller wants the full Fig.-11 trace via :func:`explore_fpga`).
-    """
-    if paradigm == 1:
-        d = pipeline_performance(layers, spec, batch, wbits, abits)
-        gops = d.gops(batch) if d.feasible else 0.0
-        eff = pipeline_dsp_efficiency(d, spec, batch) if d.feasible else 0.0
-        return ParadigmReport(1, gops, eff, d.throughput_imgs(batch)
-                              if d.feasible else 0.0, d)
-    if paradigm == 2:
-        d = generic_dse(layers, spec, batch, wbits, abits)
-        return ParadigmReport(2, d.gops(batch),
-                              generic_dsp_efficiency(d, spec, batch),
-                              d.throughput_imgs(batch), d)
-    if paradigm == 3:
-        res = explore_fpga(layers, spec, batch=batch, wbits=wbits,
-                           abits=abits, n_iters=12, n_particles=12,
-                           fix_batch=batch is not None, seed=seed)
-        d = res.best_design
-        return ParadigmReport(3, d.gops(), d.dsp_efficiency(),
-                              d.throughput_imgs(), d)
-    raise ValueError(f"paradigm must be 1|2|3, got {paradigm}")
+def _corner_seeds(space: DesignSpace, layers, spec,
+                  fixed_batch: Optional[int],
+                  max_batch: int) -> List[np.ndarray]:
+    """Pure-paradigm corner points (SP=n pipeline-only, SP=0
+    generic-only) at a few batch sizes: the warm start that guarantees
+    the hybrid search never loses to designs it strictly contains."""
+    n = len(layers)
+    b0 = fixed_batch if fixed_batch is not None else 1
+    corners = [
+        dict(sp=n, batch=b0, dsp_p=spec.dsp,
+             bram_p=0.7 * spec.bram_bytes, bw_p=0.9 * spec.bw_bytes),
+        dict(sp=0, batch=b0, dsp_p=0, bram_p=0.0,
+             bw_p=0.05 * spec.bw_bytes),
+        dict(sp=n // 2, batch=b0, dsp_p=spec.dsp // 2,
+             bram_p=0.5 * spec.bram_bytes, bw_p=0.5 * spec.bw_bytes),
+    ]
+    if fixed_batch is None:
+        corners += [
+            dict(sp=n, batch=max_batch, dsp_p=spec.dsp,
+                 bram_p=0.7 * spec.bram_bytes, bw_p=0.9 * spec.bw_bytes),
+            dict(sp=0, batch=max_batch, dsp_p=0, bram_p=0.0,
+                 bw_p=0.05 * spec.bw_bytes),
+        ]
+    return [space.from_dict(c) for c in corners]
 
 
 @dataclass
 class FPGAExploreResult:
     best_design: HybridDesign
-    pso: PSOResult
+    search: SearchResult
     spec: FPGASpec
     # Fig. 11 traces
     batch_trace: List[int]
     sp_trace: List[int]
     gops_trace: List[float]
+
+    @property
+    def pareto(self) -> ParetoFront:
+        return self.search.pareto
+
+    @property
+    def best_result(self) -> EvalResult:
+        return self.search.best_result
+
+    @property
+    def feasible(self) -> bool:
+        """False when no evaluated point (not even the warm-start
+        corners) fit the device — ``best_design`` then reports 0
+        GOP/s; check this before quoting its numbers."""
+        return self.search.best_result.feasible
 
 
 def explore_fpga(
@@ -93,51 +116,57 @@ def explore_fpga(
     n_iters: int = 20,
     fix_batch: bool = False,
     seed: int = 0,
+    strategy: Union[str, SearchStrategy] = "pso",
 ) -> FPGAExploreResult:
-    """Level-1 PSO over RAV (Algorithm 4 + Table 1 design space)."""
-    n = len(layers)
-    fix_batch = fix_batch and batch is not None
+    """Level-1 search over the RAV (Algorithm 4 + Table 1 space)."""
+    fixed = batch if (fix_batch and batch is not None) else None
+    space = fpga_design_space(layers, spec, fixed, max_batch)
+    model = HybridModel(layers, spec, wbits, abits)
+    res = run_search(
+        model, space, strategy=strategy,
+        objective=lambda r: r.gops, seed=seed,
+        seed_points=_corner_seeds(space, layers, spec, fixed, max_batch),
+        n_particles=n_particles, n_iters=n_iters,
+        population=n_particles, generations=n_iters)
 
-    def decode(p: np.ndarray):
-        sp = int(p[0])
-        b = batch if fix_batch else max(1, int(p[1]))
-        dsp_p = int(p[2])
-        bram_p = float(p[3])
-        bw_p = float(p[4])
-        return sp, b, dsp_p, bram_p, bw_p
+    i_sp = space.names.index("sp")
+    i_b = space.names.index("batch")
+    return FPGAExploreResult(
+        best_design=res.best_result.detail,
+        search=res,
+        spec=spec,
+        batch_trace=[int(p[i_b]) for p in res.position_history],
+        sp_trace=[int(p[i_sp]) for p in res.position_history],
+        gops_trace=list(res.history))
 
-    def fit(p: np.ndarray) -> float:
-        sp, b, dsp_p, bram_p, bw_p = decode(p)
-        d = hybrid_performance(layers, spec, sp, b, dsp_p, bram_p, bw_p,
-                               wbits, abits)
-        if not d.feasible:
-            return 0.0
-        return d.gops()
 
-    lo = [0, 1, 0, 0.0, 0.05 * spec.bw_bytes]
-    hi = [n, max_batch, spec.dsp, spec.bram_bytes, 0.95 * spec.bw_bytes]
-    # warm-start with the pure-paradigm corner points (SP=n pipeline-only,
-    # SP=0 generic-only) at a few batch sizes
-    b0 = batch if fix_batch else 1
-    seeds = [
-        [n, b0, spec.dsp, 0.7 * spec.bram_bytes, 0.9 * spec.bw_bytes],
-        [0, b0, 0, 0.0, 0.05 * spec.bw_bytes],
-        [n // 2, b0, spec.dsp // 2, 0.5 * spec.bram_bytes,
-         0.5 * spec.bw_bytes],
-    ]
-    if not fix_batch:
-        seeds += [[n, max_batch, spec.dsp, 0.7 * spec.bram_bytes,
-                   0.9 * spec.bw_bytes],
-                  [0, max_batch, 0, 0.0, 0.05 * spec.bw_bytes]]
-    res = particle_swarm(fit, lo, hi, integer=[True, True, True, False, False],
-                         n_particles=n_particles, n_iters=n_iters, seed=seed,
-                         seed_points=seeds)
+def benchmark_paradigm(
+    layers: Sequence[ConvLayer],
+    spec: FPGASpec,
+    paradigm: int,
+    batch: Optional[int] = None,
+    wbits: int = 16,
+    abits: int = 16,
+    sp: Optional[int] = None,
+    seed: int = 0,
+) -> EvalResult:
+    """Benchmark one paradigm after its respective optimization
+    (paper §4), through the shared :class:`AcceleratorModel` interface.
 
-    sp, b, dsp_p, bram_p, bw_p = decode(res.best_position)
-    best = hybrid_performance(layers, spec, sp, b, dsp_p, bram_p, bw_p,
-                              wbits, abits)
-    batch_trace = [max(1, int(p[1])) if not fix_batch else batch
-                   for p in res.position_history]
-    sp_trace = [int(p[0]) for p in res.position_history]
-    return FPGAExploreResult(best, res, spec, batch_trace, sp_trace,
-                             list(res.history))
+    ``batch=None`` evaluates paradigms 1/2 at batch 1 and lets the
+    paradigm-3 search explore the batch dimension (this used to be
+    impossible: the old ``fix_batch=batch is not None`` with a default
+    of 1 pinned the batch always).
+    """
+    if paradigm == 1:
+        model = PipelineModel(layers, spec, wbits, abits)
+        return model.evaluate(DesignPoint.make(batch=batch or 1))
+    if paradigm == 2:
+        model = GenericModel(layers, spec, wbits, abits)
+        return model.evaluate(DesignPoint.make(batch=batch or 1))
+    if paradigm == 3:
+        res = explore_fpga(layers, spec, batch=batch, wbits=wbits,
+                           abits=abits, n_iters=12, n_particles=12,
+                           fix_batch=batch is not None, seed=seed)
+        return res.best_result
+    raise ValueError(f"paradigm must be 1|2|3, got {paradigm}")

@@ -2,12 +2,18 @@
 
 Generic box-constrained PSO with integer snapping, exactly the paper's
 update rule: V_i = w*V_i + c1*rand()*V_toLbest + c2*rand()*V_toGbest.
-Deterministic under a fixed seed.
+Deterministic under a fixed seed. Snapping is vectorized over the whole
+swarm (one clip + masked round per iteration instead of a Python loop
+per particle).
+
+This module is the bare optimizer; the strategy-pluggable search layer
+(memo cache, Pareto tracking, alternative strategies) lives in
+``repro.core.dse.search``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -18,7 +24,16 @@ class PSOResult:
     best_fitness: float
     history: List[float]              # global best per iteration (Fig. 11 red curve)
     position_history: List[np.ndarray]  # global best position per iteration
-    evaluations: int = 0
+    evaluations: int = 0              # fitness calls (cache may dedup below)
+
+
+def snap_positions(pos: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+                   integer: np.ndarray) -> np.ndarray:
+    """Vectorized clip + integer rounding for (dim,) or (n, dim)."""
+    pos = np.clip(pos, lo, hi)
+    if integer.any():
+        pos[..., integer] = np.round(pos[..., integer])
+    return pos
 
 
 def particle_swarm(
@@ -43,17 +58,11 @@ def particle_swarm(
     dim = lo.size
     integer = np.asarray(integer, dtype=bool)
 
-    def snap(x: np.ndarray) -> np.ndarray:
-        x = np.clip(x, lo, hi)
-        y = x.copy()
-        y[integer] = np.round(y[integer])
-        return y
-
     pos = rng.uniform(lo, hi, size=(n_particles, dim))
     if seed_points is not None:
         for i, sp in enumerate(seed_points[:n_particles]):
             pos[i] = np.asarray(sp, dtype=float)
-    pos = np.stack([snap(p) for p in pos])
+    pos = snap_positions(pos, lo, hi, integer)
     vel = rng.uniform(-0.25, 0.25, size=(n_particles, dim)) * (hi - lo)
 
     fit = np.array([fitness(p) for p in pos])
@@ -74,7 +83,7 @@ def particle_swarm(
                + c2 * r2 * (gbest_pos[None, :] - pos))
         vmax = 0.5 * (hi - lo)
         vel = np.clip(vel, -vmax, vmax)
-        pos = np.stack([snap(p) for p in pos + vel])
+        pos = snap_positions(pos + vel, lo, hi, integer)
         fit = np.array([fitness(p) for p in pos])
         evals += n_particles
         improved = fit > lbest_fit

@@ -1,38 +1,44 @@
-"""Two-level DSE over TPU sharding plans (paper §5.3, mesh vocabulary).
+"""Two-level DSE over TPU sharding plans — thin adapter over the shared
+search core (paper §5.3, mesh vocabulary).
 
-Level 1 — PSO (Algorithm 4) over the RAV-equivalent
-``[SP, log2 M, front-dataflow, tail-dataflow]``: how many leading layers
-get the *specialized* recipe (paradigm-3 front), how gradient
-accumulation trades HBM for step time, and which dataflow each section
-uses.
+Level 1 — pluggable strategy (default PSO, Algorithm 4) over the
+RAV-equivalent ``[SP, log2 M, front-dataflow, tail-dataflow]``
+described as a :class:`DesignSpace`. Level 2 — inside
+:class:`TPUModel.evaluate`, each section's remaining knobs (attention
+mode by divisibility) are resolved analytically and the plan is scored
+with :func:`repro.core.analytical.tpu_model.analyze`; infeasible plans
+(HBM overflow, indivisible microbatching) score zero.
 
-Level 2 — inside the fitness function, each section's remaining knobs
-(attention mode by divisibility — the Algorithm 3 'best dataflow per
-layer' step) are resolved analytically, and the plan is scored with
-:func:`repro.core.analytical.tpu_model.analyze`. Infeasible plans
-(HBM overflow, indivisible microbatching) score zero — the paper's
-resource-budget constraints.
-
-Fitness = useful model FLOP/s per chip / peak  (roofline fraction).
+Fitness = useful model FLOP/s per chip / peak (roofline fraction); the
+search also reports the (throughput, latency, efficiency) frontier.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
-
-import numpy as np
+from typing import Union
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.analytical.tpu_model import (
-    ShardPlan,
     TPUAnalysis,
+    TPUModel,
     TPUPlan,
     analyze,
-    hbm_footprint,
 )
-from repro.core.dse.pso import PSOResult, particle_swarm
+from repro.core.dse.pareto import ParetoFront
+from repro.core.dse.search import SearchResult, SearchStrategy, run_search
+from repro.core.dse.space import DesignSpace, Dimension
 from repro.core.hardware import TPU_V5E, TPUSpec
-from repro.core.workload import model_flops
+
+
+def tpu_design_space(cfg: ModelConfig) -> DesignSpace:
+    # dataflow flags are genuine binaries: integer dims so the memo
+    # cache collapses the whole axis to two keys
+    return DesignSpace.of([
+        Dimension("sp", 0, cfg.n_layers, integer=True),
+        Dimension("log2_m", 0, 6, integer=True),
+        Dimension("front_is", 0, 1, integer=True),
+        Dimension("tail_is", 0, 1, integer=True),
+    ])
 
 
 @dataclass
@@ -40,60 +46,52 @@ class TPUExploreResult:
     best_plan: TPUPlan
     best_analysis: TPUAnalysis
     best_fitness: float            # roofline fraction
-    pso: PSOResult
-    trace: List[Dict]
+    search: SearchResult
 
-
-def _mk_plan(cfg: ModelConfig, p: np.ndarray, dp: int, model_axis: int,
-             pods: int) -> TPUPlan:
-    sp = int(np.clip(round(p[0]), 0, cfg.n_layers))
-    m = 2 ** int(np.clip(round(p[1]), 0, 6))
-    front_df = "IS" if p[2] >= 0.5 else "WS"
-    tail_df = "IS" if p[3] >= 0.5 else "WS"
-    attn = "heads" if cfg.n_heads % model_axis == 0 else "seq"
-    front = ShardPlan(front_df, attn, model_axis)
-    tail = ShardPlan(tail_df, attn, model_axis)
-    return TPUPlan(sp=sp, front=front, tail=tail, microbatches=m,
-                   remat="full", dp=dp, pods=pods)
+    @property
+    def pareto(self) -> ParetoFront:
+        return self.search.pareto
 
 
 def explore_tpu(cfg: ModelConfig, shape: ShapeConfig,
                 dp: int = 16, model_axis: int = 16, pods: int = 1,
                 n_particles: int = 16, n_iters: int = 16, seed: int = 0,
                 chip: TPUSpec = TPU_V5E,
-                flops_calibration: float = 1.0) -> TPUExploreResult:
-    mf = model_flops(cfg, shape)
-    chips = dp * model_axis * pods
-    trace: List[Dict] = []
-
-    def fitness(p: np.ndarray) -> float:
-        plan = _mk_plan(cfg, p, dp, model_axis, pods)
-        if shape.kind == "train":
-            gb = shape.global_batch
-            if gb % plan.microbatches or (gb // plan.microbatches) % dp:
-                return 0.0
-        elif plan.microbatches != 1:
-            return 0.0
-        foot = hbm_footprint(cfg, shape, plan, chip)
-        if not foot["fits"]:
-            return 0.0
-        ana = analyze(cfg, shape, plan, chip, flops_calibration)
-        if ana.step_s <= 0:
-            return 0.0
-        frac = (mf / ana.step_s) / (chips * chip.peak_flops())
-        trace.append({"sp": plan.sp, "m": plan.microbatches,
-                      "front": plan.front.dataflow,
-                      "tail": plan.tail.dataflow,
-                      "fitness": frac, "dominant": ana.dominant})
-        return frac
-
-    lo = [0, 0, 0, 0]
-    hi = [cfg.n_layers, 6, 1, 1]
-    res = particle_swarm(fitness, lo, hi,
-                         integer=[True, True, False, False],
-                         n_particles=n_particles, n_iters=n_iters,
-                         seed=seed)
-    best_plan = _mk_plan(cfg, res.best_position, dp, model_axis, pods)
-    best_ana = analyze(cfg, shape, best_plan, chip, flops_calibration)
-    return TPUExploreResult(best_plan, best_ana, res.best_fitness, res,
-                            trace)
+                flops_calibration: float = 1.0,
+                strategy: Union[str, SearchStrategy] = "pso",
+                ) -> TPUExploreResult:
+    model = TPUModel(cfg, shape, dp=dp, model_axis=model_axis, pods=pods,
+                     chip=chip, flops_calibration=flops_calibration)
+    space = tpu_design_space(cfg)
+    # Warm-start corners (the FPGA engine's pure-paradigm trick, in
+    # mesh form): a microbatch ladder under the two structural corners
+    # — all-tail IS (weights streamed; how big models fit) and
+    # all-front WS over an IS tail (resident compute recipes with the
+    # streamed footprint) — plus the all-resident WS corner for small
+    # models. A zero-fitness plateau gives PSO nothing to climb toward,
+    # so feasible anchors matter more here than on the FPGA side.
+    seeds = [space.from_dict(dict(sp=0, log2_m=m, front_is=1,
+                                  tail_is=1)) for m in (0, 3, 6)]
+    seeds += [space.from_dict(dict(sp=cfg.n_layers, log2_m=m,
+                                   front_is=0, tail_is=1))
+              for m in (0, 3, 6)]
+    seeds.append(space.from_dict(dict(sp=0, log2_m=0, front_is=0,
+                                      tail_is=0)))
+    res = run_search(
+        model, space, strategy=strategy,
+        objective=lambda r: r.efficiency, seed=seed,
+        seed_points=seeds,
+        n_particles=n_particles, n_iters=n_iters,
+        population=n_particles, generations=n_iters)
+    best_plan = model.plan_for(res.best_point)
+    best_ana = res.best_result.detail
+    if not isinstance(best_ana, TPUAnalysis):
+        # best point infeasible (tiny search budget): analyze anyway so
+        # callers always get roofline terms to report
+        best_ana = analyze(cfg, shape, best_plan, chip,
+                           flops_calibration)
+    return TPUExploreResult(
+        best_plan=best_plan,
+        best_analysis=best_ana,
+        best_fitness=res.best_fitness,
+        search=res)

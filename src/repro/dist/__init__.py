@@ -1,0 +1,25 @@
+"""Distribution substrate: logical-axis sharding recipes, fault
+tolerance hooks, and pipeline parallelism."""
+from repro.dist.sharding import (
+    DECODE_RECIPE,
+    IS_RECIPE,
+    IS_SEQ_RECIPE,
+    RECIPES,
+    Recipe,
+    WS_RECIPE,
+    WS_SEQ_RECIPE,
+    axis_rules,
+    constrain,
+    param_sharding_tree,
+    sanitize_spec,
+)
+from repro.dist.fault import StepMonitor, Watchdog, pow2_mesh_shape
+from repro.dist.pipeline import pipeline_apply, stage_split
+
+__all__ = [
+    "Recipe", "IS_RECIPE", "WS_RECIPE", "IS_SEQ_RECIPE", "WS_SEQ_RECIPE",
+    "DECODE_RECIPE", "RECIPES", "axis_rules", "constrain",
+    "param_sharding_tree", "sanitize_spec",
+    "StepMonitor", "Watchdog", "pow2_mesh_shape",
+    "pipeline_apply", "stage_split",
+]

@@ -44,7 +44,7 @@ from repro.dist.sharding import (
     param_sharding_tree,
     sanitize_spec,
 )
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.models import abstract_cache, abstract_params, decode_step, \
     prefill
 from repro.models.model import CACHE_AXES, ModelRuntime, axes_tree
@@ -159,7 +159,7 @@ def build_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh,
     (scanned layers) and the cost probes (reduced depth, unrolled)."""
     B = batch_override or shape.global_batch
     eff_shape = ShapeConfig(shape.name, shape.seq_len, B, shape.kind)
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             tc = TrainConfig(opt=AdamWConfig(), microbatches=m)
             step = make_train_step(cfg, rt, tc, recipe)
@@ -238,7 +238,7 @@ def cost_probe(cfg: ModelConfig, shape: ShapeConfig, mesh, recipe: Recipe,
         cfg_k = cfg.replace(n_layers=Lk)
         lowered = build_lowered(cfg_k, shape, mesh, recipe, rt_probe, 1,
                                 batch_override=B_probe)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             compiled = lowered.compile()
         out.append(_extract_cost(compiled))
 
@@ -295,7 +295,7 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
     lowered = build_lowered(cfg, shape, mesh, recipe, rt, m)
     t_lower = time.time() - t0
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         compiled = lowered.compile()
     t_compile = time.time() - t0
 

@@ -42,7 +42,7 @@ def _is_def(x) -> bool:
 
 def init_from_defs(defs: DefTree, key: jax.Array):
     """Deterministic init: each leaf's key is folded from its path."""
-    flat, treedef = jax.tree.flatten_with_path(defs, is_leaf=_is_def)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(defs, is_leaf=_is_def)
 
     leaves = []
     for path, d in flat:

@@ -1,22 +1,236 @@
-"""DSE engine tests: PSO determinism, hybrid dominance, TPU-plan
-feasibility constraints."""
+"""DSE core tests: design-space snapping, memo-cached evaluation,
+Pareto tracking, strategy pluggability, PSO determinism, hybrid
+dominance, TPU-plan feasibility constraints — all through the shared
+``AcceleratorModel`` + ``DesignSpace`` interface."""
 import numpy as np
 import pytest
 
 from repro.configs import get_arch, get_shape
+from repro.core.analytical import (
+    DesignPoint,
+    EvalResult,
+    GenericModel,
+    HybridModel,
+    PipelineModel,
+    TPUModel,
+)
 from repro.core.analytical.tpu_model import (
     ShardPlan,
     TPUPlan,
     analyze,
     hbm_footprint,
 )
-from repro.core.dse.engine import benchmark_paradigm, explore_fpga
-from repro.core.dse.pso import particle_swarm
-from repro.core.dse.tpu_engine import explore_tpu
+from repro.core.dse import (
+    CachedEvaluator,
+    DesignSpace,
+    Dimension,
+    ParetoFront,
+    SearchResult,
+    benchmark_paradigm,
+    explore_fpga,
+    explore_tpu,
+    fpga_design_space,
+    particle_swarm,
+    run_search,
+)
 from repro.core.hardware import KU115, TPU_V5E
 from repro.core.workload import alexnet, vgg16_conv
 
 
+# ---------------------------------------------------------------- space
+def test_space_snap_vectorized():
+    space = DesignSpace.of([
+        Dimension("a", 0, 10, integer=True),
+        Dimension("b", 0.0, 1.0),
+        Dimension("c", 0.0, 100.0, step=10.0),
+    ])
+    snapped = space.snap(np.array([[3.6, 0.5, 34.0],
+                                   [-2.0, 7.0, 998.0]]))
+    np.testing.assert_allclose(snapped, [[4.0, 0.5, 30.0],
+                                         [0.0, 1.0, 100.0]])
+
+
+def test_space_key_collides_on_lattice():
+    space = DesignSpace.of([
+        Dimension("a", 0, 10, integer=True),
+        Dimension("c", 0.0, 100.0, step=10.0),
+    ])
+    k1 = space.key(space.snap(np.array([3.2, 41.0])))
+    k2 = space.key(space.snap(np.array([2.8, 38.0])))
+    assert k1 == k2                  # both snap to (3, 40)
+
+
+def test_space_fixed_dimension_stays_fixed():
+    space = DesignSpace.of([Dimension("b", 4, 4, integer=True),
+                            Dimension("x", 0, 1)])
+    s = space.snap(np.array([[9.0, 0.5], [0.0, 0.2]]))
+    assert (s[:, 0] == 4).all()
+
+
+# ---------------------------------------------------------------- models
+def test_all_models_speak_eval_result():
+    layers = alexnet(224)
+    cfg = get_arch("minicpm-2b")
+    shape = get_shape("train_4k")
+    models = [
+        (PipelineModel(layers, KU115), DesignPoint.make(batch=1)),
+        (GenericModel(layers, KU115), DesignPoint.make(batch=1)),
+        (HybridModel(layers, KU115),
+         DesignPoint.make(sp=3, batch=1, dsp_p=KU115.dsp // 2,
+                          bram_p=KU115.bram_bytes / 2,
+                          bw_p=KU115.bw_bytes / 2)),
+        (TPUModel(cfg, shape),
+         DesignPoint.make(sp=0, log2_m=3, front_is=1, tail_is=1)),
+    ]
+    for model, point in models:
+        r = model.evaluate(point)
+        assert isinstance(r, EvalResult), model.name
+        if r.feasible:
+            assert r.gops > 0 and r.throughput > 0, model.name
+            assert r.latency_s > 0 and r.efficiency > 0, model.name
+            assert r.resources, model.name
+        else:
+            assert r.reason, model.name
+
+
+def test_infeasible_has_reason():
+    cfg = get_arch("mixtral-8x22b")
+    shape = get_shape("train_4k")
+    model = TPUModel(cfg, shape)
+    # WS + no microbatching cannot fit 141B params
+    r = model.evaluate(DesignPoint.make(sp=0, log2_m=0,
+                                        front_is=0, tail_is=0))
+    assert not r.feasible
+    assert "HBM" in r.reason or "indivisible" in r.reason
+
+
+# ---------------------------------------------------------------- cache
+def test_cached_evaluator_dedups():
+    class Counting:
+        name = "counting"
+
+        def __init__(self):
+            self.n = 0
+
+        def evaluate(self, point):
+            self.n += 1
+            x = point["x"]
+            return EvalResult(gops=-(x - 3.0) ** 2, throughput=1.0,
+                              latency_s=1.0, efficiency=0.5)
+
+    space = DesignSpace.of([Dimension("x", 0, 10, integer=True)])
+    model = Counting()
+    ev = CachedEvaluator(model, space)
+    for v in (2.9, 3.1, 3.0, 2.6, 7.0, 7.4):
+        ev(np.array([v]))
+    assert ev.calls == 6
+    assert model.n == 2                 # everything snaps to {3, 7}
+    assert ev.unique_evaluations == model.n
+    assert ev.cache_hits == 6 - model.n
+
+
+def test_search_cache_saves_evaluations_fpga():
+    """Acceptance: unique analytical evals strictly below the classic
+    PSO budget n_particles*(n_iters+1)."""
+    layers = alexnet(224)
+    res = explore_fpga(layers, KU115, n_particles=8, n_iters=8,
+                       max_batch=16)
+    s = res.search
+    assert s.unique_evaluations < 8 * (8 + 1)
+    assert s.calls == s.unique_evaluations + s.cache_hits
+
+
+# ---------------------------------------------------------------- pareto
+def test_pareto_front_nondominated():
+    front = ParetoFront()
+
+    def offer(thr, lat, eff):
+        return front.update(
+            DesignPoint.make(x=thr),
+            EvalResult(gops=1, throughput=thr, latency_s=lat,
+                       efficiency=eff))
+
+    assert offer(10, 1.0, 0.5)
+    assert offer(20, 2.0, 0.4)          # thr better, lat worse: joins
+    assert not offer(5, 3.0, 0.3)       # dominated by first
+    assert offer(10, 1.0, 0.9)          # evicts first (eff better)
+    assert len(front) == 2
+    objs = {tuple(e.canonical) for e in front}
+    assert (10, -1.0, 0.9) in objs and (20, -2.0, 0.4) in objs
+
+
+def test_pareto_ignores_infeasible():
+    front = ParetoFront()
+    assert not front.update(DesignPoint.make(x=1),
+                            EvalResult.infeasible("nope"))
+    assert len(front) == 0
+
+
+def test_explorers_expose_nonempty_pareto():
+    layers = alexnet(224)
+    res = explore_fpga(layers, KU115, n_particles=8, n_iters=6,
+                       max_batch=16)
+    assert len(res.pareto) >= 1
+    best_thr = res.pareto.best_by("throughput")
+    assert best_thr is not None and best_thr.result.feasible
+
+    t = explore_tpu(get_arch("minicpm-2b"), get_shape("train_4k"),
+                    n_particles=8, n_iters=8)
+    assert len(t.pareto) >= 1
+
+
+# ------------------------------------------------------------- strategies
+def _quadratic_search(strategy):
+    class Quad:
+        name = "quad"
+
+        def evaluate(self, point):
+            x, y = point["x"], point["y"]
+            v = 100.0 - ((x - 3.0) ** 2 + (y - 4.0) ** 2)
+            return EvalResult(gops=v, throughput=max(v, 1e-9),
+                              latency_s=1.0 / max(v, 1e-9),
+                              efficiency=0.5)
+
+    space = DesignSpace.of([Dimension("x", 0, 10),
+                            Dimension("y", 0, 10)])
+    return run_search(Quad(), space, strategy=strategy, seed=0,
+                      n_particles=16, n_iters=20,
+                      population=16, generations=20)
+
+
+@pytest.mark.parametrize("strategy",
+                         ["pso", "evolutionary", "random-refine"])
+def test_strategies_find_quadratic_optimum(strategy):
+    res = _quadratic_search(strategy)
+    assert isinstance(res, SearchResult)
+    assert res.strategy == strategy
+    assert res.best_fitness >= 99.0
+    assert abs(res.best_point["x"] - 3.0) < 0.5
+    assert abs(res.best_point["y"] - 4.0) < 0.5
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        _quadratic_search("simulated-annealing")
+
+
+def test_strategy_history_monotone():
+    for strategy in ("pso", "evolutionary", "random-refine"):
+        res = _quadratic_search(strategy)
+        assert all(b >= a - 1e-12
+                   for a, b in zip(res.history, res.history[1:])), strategy
+
+
+def test_evolutionary_explores_fpga_space():
+    layers = alexnet(224)
+    res = explore_fpga(layers, KU115, batch=1, fix_batch=True,
+                       n_particles=10, n_iters=8,
+                       strategy="evolutionary")
+    assert res.best_design.gops() > 0
+    assert res.search.strategy == "evolutionary"
+
+
+# ---------------------------------------------------------------- pso
 def test_pso_deterministic():
     f = lambda p: -float(((p - 3.0) ** 2).sum())
     r1 = particle_swarm(f, [0, 0], [10, 10], [False, False], seed=7)
@@ -38,6 +252,27 @@ def test_pso_history_monotone():
     assert all(b >= a - 1e-12 for a, b in zip(r.history, r.history[1:]))
 
 
+# ---------------------------------------------------------------- engine
+def test_benchmark_paradigm_returns_eval_result():
+    layers = vgg16_conv(224)
+    for p in (1, 2):
+        r = benchmark_paradigm(layers, KU115, p, batch=1)
+        assert isinstance(r, EvalResult)
+        assert r.gops > 0 and 0 < r.dsp_eff <= 1.0
+
+
+def test_benchmark_paradigm3_searches_batch_when_unpinned():
+    """The old engine's ``fix_batch=batch is not None`` with a batch
+    default of 1 pinned the batch dimension forever; ``batch=None``
+    must now actually search it."""
+    layers = alexnet(224)
+    free = benchmark_paradigm(layers, KU115, 3, batch=None, seed=0)
+    pinned = benchmark_paradigm(layers, KU115, 3, batch=1, seed=0)
+    assert isinstance(free.detail.batch, int)
+    assert free.detail.batch > 1          # batch helps AlexNet a lot
+    assert free.gops >= pinned.gops
+
+
 def test_hybrid_dse_dominates_pure_paradigms():
     """Paradigm 3 contains paradigms 1 and 2 as corner points, so the
     warm-started search must never lose to them."""
@@ -56,6 +291,16 @@ def test_deeper_dnn_hybrid_beats_pipeline():
     p1 = benchmark_paradigm(layers, KU115, 1, batch=1).gops
     p3 = benchmark_paradigm(layers, KU115, 3, batch=1).gops
     assert p3 >= 3.0 * p1
+
+
+def test_fpga_space_respects_fixed_batch():
+    layers = alexnet(224)
+    space = fpga_design_space(layers, KU115, batch=4)
+    i = space.names.index("batch")
+    assert space.lo[i] == space.hi[i] == 4
+    res = explore_fpga(layers, KU115, batch=4, fix_batch=True,
+                       n_particles=6, n_iters=4)
+    assert res.best_design.batch == 4
 
 
 # ---------------------------------------------------------------- TPU DSE

@@ -99,7 +99,7 @@ def test_recipe_sharded_train_step_runs():
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs import ARCHS, smoke_config
     from repro.dist.sharding import IS_RECIPE, param_sharding_tree
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_mesh, use_mesh
     from repro.models import init_params
     from repro.models.model import ModelRuntime, axes_tree
     from repro.train import AdamWConfig, TrainConfig
@@ -121,7 +121,7 @@ def test_recipe_sharded_train_step_runs():
         "labels": jax.device_put(
             jax.random.randint(key, (B, S), 0, cfg.vocab_size), bspec),
     }
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         step = jax.jit(make_train_step(
             cfg, rt, TrainConfig(opt=AdamWConfig()), IS_RECIPE))
         state, metrics = step(state, batch)
