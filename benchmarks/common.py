@@ -1,18 +1,78 @@
-"""Shared benchmark helpers: result rows + CSV/markdown emission."""
+"""Shared benchmark helpers: artifact-tree routing, dry-run artifact
+loading (loud on absence), result rows + CSV/markdown emission."""
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+from repro.artifacts import artifact_root, bench_dir, dryrun_dir, list_cells
+
+GENERATE_HINT = (
+    "no dry-run artifacts found under {root}/dryrun/ — generate the "
+    "CI-scale set first:\n"
+    "    PYTHONPATH=src python -m repro.launch.dryrun --preset ci\n"
+    "(minutes on a CPU-only host; use --preset full for the production "
+    "16x16 / 2x16x16 meshes — hours. See README §Dry-run artifacts.)")
+
+
+class DryRunArtifactsMissing(RuntimeError):
+    """Raised instead of silently returning an empty artifact list —
+    the seed behaviour let roofline/tpu_model 'pass' with empty tables
+    and a zero exit code."""
+
+
+def available_presets() -> List[str]:
+    """Presets with at least one generated cell, preference-ordered
+    (paper-scale `full` wins over `ci` when both exist)."""
+    return [p for p in ("full", "ci") if list_cells(p)]
+
+
+def resolve_preset(preset: Optional[str] = None) -> str:
+    """Pick which preset's artifacts to consume, or fail loudly."""
+    if preset is not None:
+        if not list_cells(preset):
+            raise DryRunArtifactsMissing(
+                f"no dry-run artifacts for preset {preset!r} under "
+                f"{dryrun_dir(preset)} — generate them with:\n"
+                f"    PYTHONPATH=src python -m repro.launch.dryrun "
+                f"--preset {preset}")
+        return preset
+    avail = available_presets()
+    if not avail:
+        raise DryRunArtifactsMissing(
+            GENERATE_HINT.format(root=artifact_root()))
+    return avail[0]
+
+
+def load_dryrun_artifacts(mesh: str = "single",
+                          preset: Optional[str] = None) -> List[Dict]:
+    """All cell artifacts for one mesh of one preset (auto-detected
+    when ``preset`` is None). Raises :class:`DryRunArtifactsMissing`
+    rather than returning an empty list."""
+    preset = resolve_preset(preset)
+    d = dryrun_dir(preset)
+    out = []
+    for name in list_cells(preset):
+        if name.endswith(f"__{mesh}.json"):
+            with open(os.path.join(d, name)) as f:
+                art = json.load(f)
+            art.setdefault("preset", preset)
+            out.append(art)
+    if not out:
+        raise DryRunArtifactsMissing(
+            f"preset {preset!r} has artifacts under {d} but none for "
+            f"mesh {mesh!r} — regenerate with:\n"
+            f"    PYTHONPATH=src python -m repro.launch.dryrun "
+            f"--preset {preset}")
+    return out
 
 
 def emit(name: str, rows: List[Dict], keys=None):
-    """Print a compact table and save JSON under artifacts/bench/."""
-    os.makedirs(os.path.join(ART_DIR, "bench"), exist_ok=True)
-    path = os.path.join(ART_DIR, "bench", name + ".json")
+    """Print a compact table and save JSON under <artifacts>/bench/."""
+    os.makedirs(bench_dir(), exist_ok=True)
+    path = os.path.join(bench_dir(), name + ".json")
     with open(path, "w") as f:
         json.dump(rows, f, indent=1, default=str)
     if rows:
@@ -28,18 +88,6 @@ def _fmt(v):
     if isinstance(v, float):
         return f"{v:.4g}"
     return str(v)
-
-
-def load_dryrun_artifacts(mesh: str = "single") -> List[Dict]:
-    d = os.path.join(ART_DIR, "dryrun")
-    out = []
-    if not os.path.isdir(d):
-        return out
-    for name in sorted(os.listdir(d)):
-        if name.endswith(f"__{mesh}.json"):
-            with open(os.path.join(d, name)) as f:
-                out.append(json.load(f))
-    return out
 
 
 class timed:

@@ -8,13 +8,10 @@ measured artifact confirmed it. Run AFTER the baseline sweep:
 
     PYTHONPATH=src python -m benchmarks.perf_iterations
 """
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
-
 import json
+import os
 
-from benchmarks.common import ART_DIR, emit
+from benchmarks.common import emit
 
 # Cells: (arch, shape, why picked)
 CELLS = [
@@ -129,18 +126,15 @@ def _analytic_memory_s(art):
     e.g. mixtral train baseline: 220 s would mean 180 TB/chip/step).
     Compute and collective terms stay *measured* (HLO op counts are
     reliable); only the memory term is substituted."""
-    from repro.configs import get_arch, get_shape
-    from repro.core.analytical.tpu_model import ShardPlan, TPUPlan, analyze
+    from repro.core.analytical.tpu_model import analyze
+    from repro.launch.presets import get_preset
 
-    cfg = get_arch(art["arch"])
-    shape = get_shape(art["shape"])
-    attn = "heads" if cfg.n_heads % 16 == 0 and cfg.family != "ssm" \
-        else "seq"
-    df = "IS" if shape.kind == "train" else "WS"
-    sp = ShardPlan(df, attn, 16)
-    plan = TPUPlan(0, sp, sp, art.get("microbatches", 1),
-                   art.get("remat", "full"), 16, 1)
-    return analyze(cfg, shape, plan).memory_s
+    from benchmarks.roofline_table import plan_from_artifact
+
+    pset = get_preset(art.get("preset", "full"))
+    cfg = pset.arch(art["arch"])
+    shape = pset.shape(art["shape"])
+    return analyze(cfg, shape, plan_from_artifact(cfg, shape, art)).memory_s
 
 
 def summarize(art):
@@ -151,7 +145,8 @@ def summarize(art):
     mem_an = _analytic_memory_s(art)
     adj = max(r["compute_s"], r["collective_s"], mem_an)
     mf = r["model_flops"]
-    frac_adj = (mf / adj) / (256 * 197e12) if adj > 0 else 0.0
+    chips = art.get("devices", 256)
+    frac_adj = (mf / adj) / (chips * 197e12) if adj > 0 else 0.0
     return {
         "status": "OK",
         "compute_s": round(r["compute_s"], 4),
@@ -167,17 +162,18 @@ def summarize(art):
     }
 
 
-def run(mesh_name: str = "single"):
-    from repro.launch.dryrun import lower_cell
-    from repro.launch.mesh import make_production_mesh
+def run(mesh_name: str = "single", preset_name: str = "full"):
+    from repro.artifacts import cell_path, perf_dir
+    from repro.launch.lowering import lower_cell
+    from repro.launch.presets import get_preset
 
-    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
-    out_dir = os.path.join(ART_DIR, "perf")
+    preset = get_preset(preset_name)
+    mesh = preset.build_mesh(mesh_name)
+    out_dir = perf_dir()
     os.makedirs(out_dir, exist_ok=True)
     log = []
     for arch, shape, why in CELLS:
-        base_path = os.path.join(ART_DIR, "dryrun",
-                                 f"{arch}__{shape}__{mesh_name}.json")
+        base_path = cell_path(preset_name, arch, shape, mesh_name)
         with open(base_path) as f:
             base = json.load(f)
         best = summarize(base)
@@ -200,7 +196,7 @@ def run(mesh_name: str = "single"):
                 elif kw2.get("recipe") == "seqres":
                     kw2["recipe"] = _seqres_recipe()
                 art = lower_cell(arch, shape, mesh, mesh_name,
-                                 variant=name, **kw2)
+                                 preset=preset, variant=name, **kw2)
                 with open(path, "w") as f:
                     json.dump(art, f, indent=1, default=str)
             s = summarize(art)
@@ -227,4 +223,7 @@ def run(mesh_name: str = "single"):
 
 
 if __name__ == "__main__":
+    from repro.launch.presets import get_preset as _gp
+
+    _gp("full").ensure_host_devices()
     run()

@@ -7,29 +7,30 @@ lowering actually emitted. Their ratio is therefore both a model-error
 check AND a waste detector: a large (compiled / predicted) ratio marks a
 cell whose implementation leaves flops on the table (e.g. the einsum
 MoE dispatch) — exactly what the paper's benchmarking step is for.
+
+Runs against whichever preset's artifacts are present (``full``
+preferred, else ``ci``); fails loudly with the generation command when
+there are none.
 """
 from __future__ import annotations
 
-from repro.configs import get_arch, get_shape
-from repro.core.analytical.tpu_model import ShardPlan, TPUPlan, analyze
+from repro.core.analytical.tpu_model import analyze
+from repro.launch.presets import get_preset
 
-from benchmarks.common import emit, load_dryrun_artifacts
+from benchmarks.common import emit, load_dryrun_artifacts, resolve_preset
+from benchmarks.roofline_table import plan_from_artifact
 
 
-def run(mesh: str = "single"):
+def run(mesh: str = "single", preset: str = None):
+    preset = resolve_preset(preset)
+    pset = get_preset(preset)
     rows = []
-    for art in load_dryrun_artifacts(mesh):
+    for art in load_dryrun_artifacts(mesh, preset):
         if art["status"] != "OK":
             continue
-        cfg = get_arch(art["arch"])
-        shape = get_shape(art["shape"])
-        attn = "heads" if cfg.n_heads % 16 == 0 \
-            and cfg.family != "ssm" else "seq"
-        df = "IS" if shape.kind == "train" else "WS"
-        sp = ShardPlan(df, attn, 16)
-        plan = TPUPlan(0, sp, sp, art.get("microbatches", 1), "full",
-                       16, 1)
-        pred = analyze(cfg, shape, plan)
+        cfg = pset.arch(art["arch"])
+        shape = pset.shape(art["shape"])
+        pred = analyze(cfg, shape, plan_from_artifact(cfg, shape, art))
         meas = art["roofline"]["compute_s"]
         ratio = meas / max(pred.compute_s, 1e-12)
         rows.append({"arch": art["arch"], "shape": art["shape"],
@@ -38,10 +39,11 @@ def run(mesh: str = "single"):
     med = sorted(r["hlo_over_pred"] for r in rows)[len(rows) // 2] \
         if rows else 0
     emit(f"tpu_model_error_{mesh}", rows)
-    print(f"[tpu-model] {len(rows)} cells; median HLO/analytic compute "
-          f"ratio = {med:.2f} (>1 = backend overhead/waste; large values "
-          f"flag optimization targets)")
-    return {"cells": len(rows), "median_ratio": med, "pass": len(rows) > 0}
+    print(f"[tpu-model/{preset}] {len(rows)} cells; median HLO/analytic "
+          f"compute ratio = {med:.2f} (>1 = backend overhead/waste; large "
+          f"values flag optimization targets)")
+    return {"preset": preset, "cells": len(rows), "median_ratio": med,
+            "pass": len(rows) > 0}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,68 @@
+"""Artifact tree resolution, shared by the dry-run driver, the
+benchmarks and the tests.
+
+One layout, one resolver — every producer/consumer routes through this
+module instead of computing ``__file__``-relative paths (which break
+under installed-package layouts where ``repro`` lives in
+``site-packages`` far from any writable ``artifacts/`` tree):
+
+    <root>/dryrun/<preset>/<arch>__<shape>__<mesh>.json   per-cell artifact
+    <root>/dryrun/<preset>/_manifest.json                 generation metadata
+    <root>/dryrun/pp/...                                  pipeline-parallel runs
+    <root>/bench/<name>.json                              benchmark outputs
+    <root>/perf/...                                       §Perf hillclimb variants
+
+``<root>`` is ``$REPRO_ARTIFACT_DIR`` when set, else ``./artifacts``
+relative to the current working directory (the repo checkout root in
+every documented flow). All helpers are functions, not constants, so
+the environment variable is honored at call time.
+"""
+from __future__ import annotations
+
+import os
+
+ENV_VAR = "REPRO_ARTIFACT_DIR"
+
+MANIFEST_NAME = "_manifest.json"
+
+
+def artifact_root() -> str:
+    """Absolute artifact root: ``$REPRO_ARTIFACT_DIR`` or ``./artifacts``."""
+    return os.path.abspath(
+        os.environ.get(ENV_VAR) or os.path.join(os.getcwd(), "artifacts"))
+
+
+def dryrun_dir(preset: str) -> str:
+    """Per-preset dry-run cell directory (not created)."""
+    return os.path.join(artifact_root(), "dryrun", preset)
+
+
+def bench_dir() -> str:
+    return os.path.join(artifact_root(), "bench")
+
+
+def perf_dir() -> str:
+    return os.path.join(artifact_root(), "perf")
+
+
+def pp_dir() -> str:
+    """Pipeline-parallel dry-run artifacts (kept out of the per-preset
+    cell directories so the 80-cell census stays exact)."""
+    return os.path.join(artifact_root(), "dryrun", "pp")
+
+
+def manifest_path(preset: str) -> str:
+    return os.path.join(dryrun_dir(preset), MANIFEST_NAME)
+
+
+def cell_path(preset: str, arch: str, shape: str, mesh: str) -> str:
+    return os.path.join(dryrun_dir(preset), f"{arch}__{shape}__{mesh}.json")
+
+
+def list_cells(preset: str) -> list:
+    """Cell artifact filenames for ``preset`` (metadata files excluded)."""
+    d = dryrun_dir(preset)
+    if not os.path.isdir(d):
+        return []
+    return sorted(n for n in os.listdir(d)
+                  if n.endswith(".json") and not n.startswith("_"))

@@ -71,7 +71,12 @@ def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
     }
     counts: Dict[str, int] = {k: 0 for k in out}
     for line in hlo_text.splitlines():
-        if "-done" in line or "replica_groups" not in line:
+        if "-done" in line:
+            continue
+        # collective-permute carries source_target_pairs, not
+        # replica_groups; everything else must name its groups
+        if "replica_groups" not in line \
+                and "source_target_pairs" not in line:
             continue
         m = _COLLECTIVE_RE.search(line)
         if not m:

@@ -1,366 +1,96 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
+"""Dry-run sweep driver: lower + compile every (architecture x
+input-shape x mesh) cell at a chosen scale preset and emit one JSON
+artifact per cell.
 
-"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
-cell on the production meshes and extract the roofline raw terms.
+    # CI scale: 8 forced host devices, smoke-scale cells, minutes on CPU
+    PYTHONPATH=src python -m repro.launch.dryrun --preset ci
 
-For each cell this driver:
-  1. picks the default sharding recipe (the level-2 heuristic the DSE
-     starts from — head- vs seq-parallel attention by divisibility,
-     split-KV for decode),
-  2. builds the step function (train_step / prefill / decode_step),
-  3. ``jit(...).lower(abstract args).compile()`` on the 16x16 mesh and
-     the 2x16x16 multi-pod mesh,
-  4. records ``memory_analysis()`` (proves the cell fits in HBM),
-     ``cost_analysis()`` (FLOPs / bytes) and the collective-bytes
-     breakdown parsed from the optimized HLO,
-  5. writes one JSON artifact per cell under ``artifacts/dryrun/``.
+    # production scale: 16x16 / 2x16x16 meshes, paper-scale cells, hours
+    PYTHONPATH=src python -m repro.launch.dryrun --preset full
 
+The per-cell pipeline lives in :mod:`repro.launch.lowering` (also used
+by ``benchmarks/perf_iterations.py`` and ``repro.launch.reprobe``); the
+scale knobs live in :mod:`repro.launch.presets`.  Importing this module
+has no side effects — ``XLA_FLAGS`` is only touched on the ``__main__``
+path, via ``Preset.ensure_host_devices()``.
+
+Artifacts land under ``<artifact-root>/dryrun/<preset>/`` (root =
+``$REPRO_ARTIFACT_DIR`` or ``./artifacts``; ``--out`` overrides), plus a
+``_manifest.json`` recording the preset geometry for consumers.
 Skipped cells (encoder-only decode, 524k full attention) are emitted as
 explicit SKIP rows with the assignment's reason.
 """
+from __future__ import annotations
+
 import argparse
 import json
+import os
 import time
 import traceback
-from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ARCHS, SHAPES, get_arch, get_shape, \
-    shape_skip_reason
-from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.roofline import collective_bytes_from_hlo, roofline_report
-from repro.dist.sharding import (
-    DECODE_RECIPE,
-    IS_RECIPE,
-    IS_SEQ_RECIPE,
-    Recipe,
-    WS_RECIPE,
-    WS_SEQ_RECIPE,
-    axis_rules,
-    param_sharding_tree,
-    sanitize_spec,
+from repro.artifacts import MANIFEST_NAME, dryrun_dir
+from repro.configs import ARCHS, SHAPES
+from repro.launch.lowering import (   # noqa: F401  (re-exported: the
+    build_lowered,                    # pre-refactor module was the
+    cost_probe,                       # import point for all of these)
+    default_microbatches,
+    default_recipe,
+    input_specs,
+    lower_cell,
 )
-from repro.launch.mesh import make_production_mesh, use_mesh
-from repro.models import abstract_cache, abstract_params, decode_step, \
-    prefill
-from repro.models.model import CACHE_AXES, ModelRuntime, axes_tree
-from repro.train.loop import TrainConfig, make_train_step
-from repro.train.optim import AdamWConfig
-
-ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                            "artifacts", "dryrun")
+from repro.launch.presets import PRESETS, Preset, get_preset
 
 
-# ---------------------------------------------------------------------------
-# Default recipes (level-2 starting point; hillclimbed by the DSE)
-# ---------------------------------------------------------------------------
-def default_recipe(cfg: ModelConfig, shape: ShapeConfig,
-                   model_axis: int = 16) -> Recipe:
-    heads_divide = cfg.n_heads % model_axis == 0 and cfg.family != "ssm"
-    # serving memory gate: bf16 weights sharded over `model` only must
-    # leave room for the KV cache; oversize models (mixtral: 281 GB
-    # bf16 / 16 = 17.6 GB > HBM) also shard weights over `data`
-    # (ZeRO-3-style inference: per-layer all-gather). Caught by the
-    # dry-run memory_analysis — see EXPERIMENTS.md §Dry-run.
-    big = cfg.param_count() * 2 / model_axis > 12e9
-    if shape.kind == "train":
-        base = IS_RECIPE if heads_divide else IS_SEQ_RECIPE
-        return base
-    if shape.kind == "prefill":
-        base = WS_RECIPE if heads_divide else WS_SEQ_RECIPE
-        return base.with_rules(embed=("data",)).replace_name(
-            base.name + "+zero3") if big else base
-    return DECODE_RECIPE.with_rules(embed=("data",)).replace_name(
-        DECODE_RECIPE.name + "+zero3") if big else DECODE_RECIPE
+def write_manifest(preset: Preset, out_dir: str, results) -> str:
+    import jax
 
-
-def default_microbatches(cfg: ModelConfig, shape: ShapeConfig) -> int:
-    """Gradient-accumulation factor so the scan-carry activations fit:
-    target <= ~64k global tokens per microbatch for wide models."""
-    if shape.kind != "train":
-        return 1
-    tokens = shape.seq_len * shape.global_batch
-    target = 65536 if cfg.d_model >= 4096 else 131072
-    m = max(1, tokens // target)
-    while shape.global_batch % m:
-        m -= 1
-    return m
-
-
-# ---------------------------------------------------------------------------
-# Abstract inputs
-# ---------------------------------------------------------------------------
-def _sds(shape, dtype, mesh, spec):
-    spec = sanitize_spec(spec, shape, mesh)
-    return jax.ShapeDtypeStruct(
-        shape, jnp.dtype(dtype),
-        sharding=jax.sharding.NamedSharding(mesh, spec))
-
-
-def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
-                kind: Optional[str] = None) -> Dict[str, Any]:
-    """ShapeDtypeStruct stand-ins for every model input of this cell."""
-    from jax.sharding import PartitionSpec as P
-
-    kind = kind or shape.kind
-    B, S = shape.global_batch, shape.seq_len
-    bspec = P(("pod", "data"))
-    if kind in ("train", "prefill"):
-        batch: Dict[str, Any] = {}
-        if cfg.frontend == "token":
-            batch["tokens"] = _sds((B, S), jnp.int32, mesh, bspec)
-        else:
-            batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
-                                   P(("pod", "data"), None, None))
-        if kind == "train":
-            batch["labels"] = _sds((B, S), jnp.int32, mesh, bspec)
-        return batch
-    # decode: one new token per sequence, KV cache of length seq_len
-    return {"tokens": _sds((B,), jnp.int32, mesh, bspec)}
-
-
-def _shard_tree(abstract, axes, recipe, mesh):
-    shardings = param_sharding_tree(axes, recipe, mesh, abstract)
-    return jax.tree.map(
-        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
-        abstract, shardings)
-
-
-def abstract_train_state(cfg: ModelConfig, recipe: Recipe, mesh):
-    params = abstract_params(cfg)
-    axes = axes_tree(cfg)
-    params = _shard_tree(params, axes, recipe, mesh)
-    opt = {
-        "mu": params,
-        "nu": params,
-        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    stats = {"OK": 0, "SKIP": 0, "FAIL": 0}
+    for r in results:
+        stats[r["status"]] = stats.get(r["status"], 0) + 1
+    manifest = {
+        "preset": preset.name,
+        "description": preset.description,
+        "shrink_archs": preset.shrink_archs,
+        "meshes": {name: {"shape": list(spec.shape),
+                          "axes": list(spec.axes),
+                          "devices": spec.devices}
+                   for name, spec in preset.meshes.items()},
+        "shapes": {name: {"seq_len": s.seq_len,
+                          "global_batch": s.global_batch,
+                          "kind": s.kind}
+                   for name, s in preset.shapes.items()},
+        "counts": stats,
+        "cells": len(results),
+        "jax": jax.__version__,
+        "generated_unix": time.time(),
     }
-    return {"params": params, "opt": opt}
+    path = os.path.join(out_dir, MANIFEST_NAME)
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
 
 
-def abstract_decode_cache(cfg: ModelConfig, shape: ShapeConfig,
-                          recipe: Recipe, mesh):
-    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
-    caxes = {k: CACHE_AXES[k] for k in cache}
-    return _shard_tree(cache, caxes, recipe, mesh)
-
-
-# ---------------------------------------------------------------------------
-# Cell runners
-# ---------------------------------------------------------------------------
-def build_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh,
-                  recipe: Recipe, rt: ModelRuntime, m: int,
-                  batch_override: Optional[int] = None):
-    """Lower one cell's step function. Used for the production compile
-    (scanned layers) and the cost probes (reduced depth, unrolled)."""
-    B = batch_override or shape.global_batch
-    eff_shape = ShapeConfig(shape.name, shape.seq_len, B, shape.kind)
-    with use_mesh(mesh):
-        if shape.kind == "train":
-            tc = TrainConfig(opt=AdamWConfig(), microbatches=m)
-            step = make_train_step(cfg, rt, tc, recipe)
-            state = abstract_train_state(cfg, recipe, mesh)
-            batch = input_specs(cfg, eff_shape, mesh)
-            # donate the train state: params/opt update in place (real
-            # deployments do this; halves the param-sized temp footprint)
-            return jax.jit(step, donate_argnums=(0,)).lower(state, batch)
-        if shape.kind == "prefill":
-            params = _shard_tree(abstract_params(cfg, "bfloat16"),
-                                 axes_tree(cfg), recipe, mesh)
-            batch = input_specs(cfg, eff_shape, mesh)
-
-            def prefill_step(p, b):
-                with axis_rules(recipe):
-                    return prefill(p, cfg, b, shape.seq_len, rt)
-
-            return jax.jit(prefill_step).lower(params, batch)
-        # decode
-        params = _shard_tree(abstract_params(cfg, "bfloat16"),
-                             axes_tree(cfg), recipe, mesh)
-        cache = abstract_decode_cache(cfg, eff_shape, recipe, mesh)
-        tokens = input_specs(cfg, eff_shape, mesh)["tokens"]
-
-        def serve_step(p, c, t):
-            with axis_rules(recipe):
-                return decode_step(p, cfg, c, t, rt)
-
-        # donate the KV/state cache: decode updates it in place
-        return jax.jit(serve_step, donate_argnums=(1,)).lower(
-            params, cache, tokens)
-
-
-def _extract_cost(compiled) -> Dict[str, float]:
-    cost = compiled.cost_analysis()
-    coll = collective_bytes_from_hlo(compiled.as_text())
-    return {
-        "flops": float(cost.get("flops", 0.0)),
-        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
-        "transcendentals": float(cost.get("transcendentals", 0.0)),
-        "collectives": coll,
-    }
-
-
-def _probe_depths(cfg: ModelConfig):
-    """Two reduced depths (in layers) + the unit for extrapolation."""
-    if cfg.family == "hybrid":
-        unit = cfg.shared_attn_period
-        return unit, 2 * unit
-    return 2, 4
-
-
-def cost_probe(cfg: ModelConfig, shape: ShapeConfig, mesh, recipe: Recipe,
-               rt: ModelRuntime, m: int) -> Dict[str, Any]:
-    """XLA's HloCostAnalysis miscounts while-loop trip counts
-    inconsistently (empirically: the grad-accum loop body counts once;
-    layer scans count once or x-trip depending on loop form). The probe
-    sidesteps loops entirely: lower the SAME step at depths L1 < L2 with
-    fully-unrolled layer scans and microbatch-size batch, then linearly
-    extrapolate per-step cost over depth (exact: every layer is
-    shape-identical) and scale by the accumulation factor m.
-    """
-    L1, L2 = _probe_depths(cfg)
-    # attn_chunk = seq_len: the KV-chunk scan collapses to one iteration,
-    # so its (loop-miscounted) body is counted exactly once == fully.
-    # Verified: with the production chunk=512 at S=32k, HloCostAnalysis
-    # undercounts attention ~64x (loop body counted once).
-    rt_probe = ModelRuntime(dtype=rt.dtype, remat=rt.remat,
-                            attn_chunk=max(shape.seq_len, 16),
-                            moe_chunk=rt.moe_chunk,
-                            unroll_layers=True)
-    B_probe = shape.global_batch // m if shape.kind == "train" \
-        else shape.global_batch
-    out = []
-    for Lk in (L1, L2):
-        cfg_k = cfg.replace(n_layers=Lk)
-        lowered = build_lowered(cfg_k, shape, mesh, recipe, rt_probe, 1,
-                                batch_override=B_probe)
-        with use_mesh(mesh):
-            compiled = lowered.compile()
-        out.append(_extract_cost(compiled))
-
-    def lerp(v1: float, v2: float) -> float:
-        slope = (v2 - v1) / (L2 - L1)
-        return (v1 + slope * (cfg.n_layers - L1)) * m
-
-    coll = {}
-    for k, v1 in out[0]["collectives"].items():
-        if isinstance(v1, float):
-            coll[k] = lerp(v1, out[1]["collectives"][k])
-    coll["op_counts"] = out[1]["collectives"].get("op_counts", {})
-    return {
-        "flops": lerp(out[0]["flops"], out[1]["flops"]),
-        "bytes_accessed": lerp(out[0]["bytes_accessed"],
-                               out[1]["bytes_accessed"]),
-        "transcendentals": lerp(out[0]["transcendentals"],
-                                out[1]["transcendentals"]),
-        "collectives": coll,
-        "probe_depths": [L1, L2],
-    }
-
-
-def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
-               recipe: Optional[Recipe] = None,
-               microbatches: Optional[int] = None,
-               remat: str = "full", attn_chunk: int = 512,
-               moe_chunk: int = 0, cfg_transform=None,
-               variant: str = "baseline") -> Dict[str, Any]:
-    """Lower+compile one cell; returns the artifact dict.
-
-    ``moe_chunk`` / ``cfg_transform`` / ``recipe`` / ``microbatches`` are
-    the §Perf hillclimb knobs; the defaults produce the paper-faithful
-    baseline.
-    """
-    cfg = get_arch(arch)
-    shape = get_shape(shape_name)
-    skip = shape_skip_reason(cfg, shape)
-    if skip:
-        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-                "status": "SKIP", "reason": skip}
-    if cfg_transform is not None:
-        cfg = cfg_transform(cfg)
-
-    model_axis = dict(zip(mesh.axis_names,
-                          mesh.devices.shape))["model"]
-    recipe = recipe or default_recipe(cfg, shape, model_axis)
-    rt = ModelRuntime(dtype="bfloat16", remat=remat, attn_chunk=attn_chunk,
-                      moe_chunk=moe_chunk)
-    m = (microbatches or default_microbatches(cfg, shape)) \
-        if shape.kind == "train" else 1
-
-    t0 = time.time()
-    lowered = build_lowered(cfg, shape, mesh, recipe, rt, m)
-    t_lower = time.time() - t0
-    t0 = time.time()
-    with use_mesh(mesh):
-        compiled = lowered.compile()
-    t_compile = time.time() - t0
-
-    mem = compiled.memory_analysis()
-    scanned = _extract_cost(compiled)       # loop-count caveats; kept raw
-    probe = cost_probe(cfg, shape, mesh, recipe, rt, m)
-    cost = probe
-    coll = probe["collectives"]
-    n_dev = mesh.devices.size
-
-    art = {
-        "arch": arch, "shape": shape_name, "mesh": mesh_name,
-        "status": "OK",
-        "variant": variant,
-        "recipe": recipe.name,
-        "microbatches": m,
-        "remat": remat,
-        "attn_chunk": attn_chunk,
-        "moe_chunk": moe_chunk,
-        "devices": int(n_dev),
-        "lower_s": round(t_lower, 2),
-        "compile_s": round(t_compile, 2),
-        "memory": {
-            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
-            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
-            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
-            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
-            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0)),
-            "generated_code_bytes": int(
-                getattr(mem, "generated_code_size_in_bytes", 0)),
-        },
-        "cost": {
-            "flops": cost["flops"],
-            "bytes_accessed": cost["bytes_accessed"],
-            "transcendentals": cost["transcendentals"],
-            "probe_depths": cost["probe_depths"],
-        },
-        "cost_scanned_raw": {k: v for k, v in scanned.items()
-                             if k != "collectives"},
-        "collectives": coll,
-    }
-    art["roofline"] = roofline_report(cfg, shape, art)
-    return art
-
-
-SKIP_NOTE = "assignment rule"
-
-
-def run_all(mesh_names=("single", "multi"), archs=None, shapes=None,
-            out_dir: str = ARTIFACT_DIR, verbose: bool = True):
+def run_all(preset: Preset, mesh_names=("single", "multi"),
+            archs=None, shapes=None, out_dir: str = None,
+            verbose: bool = True):
+    out_dir = out_dir or dryrun_dir(preset.name)
     os.makedirs(out_dir, exist_ok=True)
     archs = archs or sorted(ARCHS)
     shapes = shapes or list(SHAPES)
     results = []
     for mesh_name in mesh_names:
-        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        mesh = preset.build_mesh(mesh_name)
         for arch in archs:
             for shape_name in shapes:
                 tag = f"{arch}__{shape_name}__{mesh_name}"
                 path = os.path.join(out_dir, tag + ".json")
                 try:
-                    art = lower_cell(arch, shape_name, mesh, mesh_name)
+                    art = lower_cell(arch, shape_name, mesh, mesh_name,
+                                     preset=preset)
                 except Exception as e:                # noqa: BLE001
                     art = {"arch": arch, "shape": shape_name,
-                           "mesh": mesh_name, "status": "FAIL",
+                           "mesh": mesh_name, "preset": preset.name,
+                           "status": "FAIL",
                            "error": f"{type(e).__name__}: {e}",
                            "trace": traceback.format_exc()[-2000:]}
                 with open(path, "w") as f:
@@ -370,9 +100,6 @@ def run_all(mesh_names=("single", "multi"), archs=None, shapes=None,
                     status = art["status"]
                     extra = ""
                     if status == "OK":
-                        mb = art["memory"]
-                        per_dev = (mb["argument_bytes"] + mb["temp_bytes"]
-                                   + mb["output_bytes"]) / art["devices"]
                         extra = (f"compile={art['compile_s']:.0f}s "
                                  f"flops={art['cost']['flops']:.3g} ")
                     elif status == "SKIP":
@@ -380,26 +107,41 @@ def run_all(mesh_names=("single", "multi"), archs=None, shapes=None,
                     else:
                         extra = art["error"][:90]
                     print(f"[{status:4s}] {tag:60s} {extra}", flush=True)
+    # a full sweep (every arch/shape/mesh) gets a manifest so consumers
+    # and the contract tests can introspect the preset geometry
+    if archs == sorted(ARCHS) and list(shapes) == list(SHAPES) \
+            and tuple(mesh_names) == ("single", "multi"):
+        write_manifest(preset, out_dir, results)
     return results
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--preset", default="full", choices=sorted(PRESETS),
+                    help="scale preset: " + "; ".join(
+                        f"{p.name}: {p.description}"
+                        for p in PRESETS.values()))
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="both",
                     choices=("single", "multi", "both"))
-    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--out", default=None,
+                    help="artifact directory (default: "
+                         "$REPRO_ARTIFACT_DIR/dryrun/<preset> or "
+                         "./artifacts/dryrun/<preset>)")
     args = ap.parse_args()
+    preset = get_preset(args.preset)
+    preset.ensure_host_devices()
     meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
     archs = [args.arch] if args.arch else None
     shapes = [args.shape] if args.shape else None
-    results = run_all(meshes, archs, shapes, args.out)
+    t0 = time.time()
+    results = run_all(preset, meshes, archs, shapes, args.out)
     bad = [r for r in results if r["status"] == "FAIL"]
-    print(f"\n{len(results)} cells: "
+    print(f"\n[{preset.name}] {len(results)} cells: "
           f"{sum(r['status'] == 'OK' for r in results)} OK, "
           f"{sum(r['status'] == 'SKIP' for r in results)} SKIP, "
-          f"{len(bad)} FAIL")
+          f"{len(bad)} FAIL  ({time.time() - t0:.0f}s)")
     raise SystemExit(1 if bad else 0)
 
 

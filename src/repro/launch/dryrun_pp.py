@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
-
 """Pipeline-parallel dry-run — the paper's paradigm-1 *spatial* mode.
 
 Mesh (stage=4, data=8, model=8) = 256 chips: each stage group holds a
@@ -10,26 +6,30 @@ stage'), microbatches stream through `collective_permute`, and the
 whole schedule (fwd + pipelined bwd via jax.grad) lowers and compiles.
 
     PYTHONPATH=src python -m repro.launch.dryrun_pp --arch chatglm3-6b
+
+Importing this module has no side effects; the forced host-device
+count is set on the ``__main__`` path only.
 """
 import argparse
 import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.artifacts import pp_dir
 from repro.configs import get_arch, get_shape
 from repro.core.roofline import collective_bytes_from_hlo
 from repro.dist.pipeline import stage_split
-from repro.launch.mesh import make_mesh
+from repro.launch.lowering import cost_analysis_dict
+from repro.launch.mesh import make_mesh, use_mesh
+from repro.launch.presets import force_host_devices
 from repro.models import abstract_params
 from repro.models.layers import cross_entropy
 from repro.models.model import ModelRuntime, attn_block, norm
 from jax.experimental.shard_map import shard_map
-
-ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                   "artifacts", "dryrun")
 
 
 def lower_pp(arch: str = "chatglm3-6b", n_stages: int = 4,
@@ -112,12 +112,12 @@ def lower_pp(arch: str = "chatglm3-6b", n_stages: int = 4,
         sharding=NamedSharding(mesh, P(None, "data")))
 
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(train_grads).lower(aps, tok, lab)
         compiled = lowered.compile()
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = collective_bytes_from_hlo(compiled.as_text())
     art = {
         "arch": arch, "mode": "pipeline-parallel",
@@ -142,9 +142,11 @@ def main():
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--micro", type=int, default=8)
     args = ap.parse_args()
+    force_host_devices(args.stages * 8 * 8)
     art = lower_pp(args.arch, args.stages, args.micro)
-    os.makedirs(ART, exist_ok=True)
-    path = os.path.join(ART, f"{args.arch}__pp__stage{args.stages}.json")
+    out = pp_dir()
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, f"{args.arch}__pp__stage{args.stages}.json")
     with open(path, "w") as f:
         json.dump(art, f, indent=1)
     print(json.dumps(art, indent=1))

@@ -1,0 +1,172 @@
+"""Scale presets for the dry-run artifact subsystem.
+
+A :class:`Preset` fixes the three scale knobs of a dry-run sweep — the
+meshes, the input shapes and the architecture sizes — so the SAME
+per-cell pipeline (recipe selection -> step-fn build -> lower/compile
+-> cost/memory/collective extraction -> JSON emit) runs at two scales:
+
+* ``full``  — the production 16x16 / 2x16x16 meshes with the paper's
+  real architectures and shapes.  Hours of compile time; needs a host
+  that tolerates 512 forced XLA host devices.
+* ``ci``    — an 8-device host mesh with ``smoke_config``-reduced
+  architectures and shrunken shapes.  The whole 80-cell sweep lowers,
+  compiles and emits contract-valid artifacts on a plain CPU host in
+  minutes, which is what CI and the artifact contract tests consume.
+
+Cell *identity* (arch/shape names, skip rules, 80-cell census) is
+preset-independent: a preset only rescales the cells, so both scales
+satisfy the same artifact contract (``tests/test_dryrun_artifacts.py``).
+
+This module imports no jax at module scope — consumers that only need
+names/shapes (benchmarks, tests) stay light; mesh construction is lazy.
+"""
+from __future__ import annotations
+
+import math
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Tuple
+
+from repro.configs import get_arch, get_shape, smoke_config
+from repro.configs.base import ModelConfig, ShapeConfig
+
+_DEVCOUNT_RE = re.compile(r"--xla_force_host_platform_device_count=\d+")
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Mesh geometry as pure data (built lazily via jax.make_mesh)."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def devices(self) -> int:
+        return math.prod(self.shape)
+
+    def axis_sizes(self) -> Dict[str, int]:
+        return dict(zip(self.axes, self.shape))
+
+
+@dataclass(frozen=True)
+class Preset:
+    """One scale point of the dry-run sweep."""
+
+    name: str
+    meshes: Mapping[str, MeshSpec]
+    shapes: Mapping[str, ShapeConfig]
+    shrink_archs: bool = False
+    description: str = ""
+
+    # -- cell resolution ----------------------------------------------------
+    def arch(self, name: str) -> ModelConfig:
+        cfg = get_arch(name)
+        return smoke_config(cfg) if self.shrink_archs else cfg
+
+    def shape(self, name: str) -> ShapeConfig:
+        if name not in self.shapes:
+            raise KeyError(
+                f"unknown shape {name!r} for preset {self.name!r}; "
+                f"available: {sorted(self.shapes)}")
+        return self.shapes[name]
+
+    def mesh_spec(self, mesh_name: str) -> MeshSpec:
+        if mesh_name not in self.meshes:
+            raise KeyError(
+                f"unknown mesh {mesh_name!r} for preset {self.name!r}; "
+                f"available: {sorted(self.meshes)}")
+        return self.meshes[mesh_name]
+
+    def build_mesh(self, mesh_name: str):
+        from repro.launch.mesh import make_mesh  # lazy: jax import
+
+        spec = self.mesh_spec(mesh_name)
+        return make_mesh(spec.shape, spec.axes)
+
+    # -- host-device setup --------------------------------------------------
+    def host_device_count(self) -> int:
+        return max(spec.devices for spec in self.meshes.values())
+
+    def ensure_host_devices(self) -> None:
+        """Force enough XLA host-platform devices for this preset.
+
+        Entrypoints call this explicitly (the seed code mutated
+        ``XLA_FLAGS`` at ``import repro.launch.dryrun``, poisoning every
+        process that merely imported ``lower_cell``).  Must run before
+        jax initializes its backend; raises if the backend is already up
+        with fewer devices than the preset needs.
+        """
+        force_host_devices(self.host_device_count())
+
+
+def force_host_devices(need: int) -> None:
+    """Mutate ``XLA_FLAGS`` to force ``need`` host devices, then verify.
+
+    The single sanctioned place the process environment is touched; any
+    already-present device-count flag is replaced (never duplicated)
+    unless it already asks for at least ``need`` devices.
+    """
+    import jax  # local: keep module import side-effect free
+
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = _DEVCOUNT_RE.search(flags)
+    if m is None or int(m.group().rsplit("=", 1)[1]) < need:
+        flags = _DEVCOUNT_RE.sub("", flags).strip()
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={need}"
+            .strip())
+    have = jax.local_device_count()   # initializes the backend
+    if have < need:
+        raise RuntimeError(
+            f"need {need} host devices but jax initialized with {have}; "
+            f"call force_host_devices() (or set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need}) before any "
+            f"jax device use")
+
+
+FULL = Preset(
+    name="full",
+    meshes={
+        "single": MeshSpec((16, 16), ("data", "model")),
+        "multi": MeshSpec((2, 16, 16), ("pod", "data", "model")),
+    },
+    shapes={
+        "train_4k": get_shape("train_4k"),
+        "prefill_32k": get_shape("prefill_32k"),
+        "decode_32k": get_shape("decode_32k"),
+        "long_500k": get_shape("long_500k"),
+    },
+    shrink_archs=False,
+    description="production 16x16 / 2x16x16 meshes, paper-scale cells "
+                "(hours of compile time)",
+)
+
+# Shrunken shapes keep the canonical names: cell identity, filenames and
+# skip rules (which match on shape *name* and arch flags preserved by
+# smoke_config) are shared with the full preset.
+CI = Preset(
+    name="ci",
+    meshes={
+        "single": MeshSpec((2, 4), ("data", "model")),
+        "multi": MeshSpec((2, 2, 2), ("pod", "data", "model")),
+    },
+    shapes={
+        "train_4k": ShapeConfig("train_4k", 512, 16, "train"),
+        "prefill_32k": ShapeConfig("prefill_32k", 1024, 4, "prefill"),
+        "decode_32k": ShapeConfig("decode_32k", 1024, 8, "decode"),
+        "long_500k": ShapeConfig("long_500k", 4096, 1, "decode"),
+    },
+    shrink_archs=True,
+    description="8-device host mesh, smoke-scale cells (CPU-only host, "
+                "minutes)",
+)
+
+PRESETS: Dict[str, Preset] = {p.name: p for p in (FULL, CI)}
+
+
+def get_preset(name: str) -> Preset:
+    if name not in PRESETS:
+        raise KeyError(
+            f"unknown preset {name!r}; available: {sorted(PRESETS)}")
+    return PRESETS[name]

@@ -1,37 +1,37 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
-
 """Recompute the cost probe + roofline for existing dry-run artifacts
 (production compile results — memory, compile times — are kept).
 Used after probe-methodology fixes so the 80-cell table stays coherent
 without re-running the expensive production compiles.
+
+    PYTHONPATH=src python -m repro.launch.reprobe --preset ci
 """
+from __future__ import annotations
+
+import argparse
 import json
-import sys
+import os
 import time
 
-import jax
-
-from repro.configs import get_arch, get_shape
+from repro.artifacts import dryrun_dir
 from repro.core.roofline import roofline_report
-from repro.launch.dryrun import ARTIFACT_DIR, cost_probe, default_recipe
-from repro.launch.mesh import make_production_mesh
+from repro.launch.lowering import cost_probe, default_recipe
+from repro.launch.presets import PRESETS, Preset, get_preset
 from repro.models.model import ModelRuntime
 
 
-def main(out_dir: str = ARTIFACT_DIR):
-    meshes = {"single": make_production_mesh(),
-              "multi": make_production_mesh(multi_pod=True)}
-    names = sorted(n for n in os.listdir(out_dir) if n.endswith(".json"))
+def reprobe(preset: Preset, out_dir: str = None):
+    out_dir = out_dir or dryrun_dir(preset.name)
+    meshes = {name: preset.build_mesh(name) for name in preset.meshes}
+    names = sorted(n for n in os.listdir(out_dir)
+                   if n.endswith(".json") and not n.startswith("_"))
     for name in names:
         path = os.path.join(out_dir, name)
         with open(path) as f:
             art = json.load(f)
         if art.get("status") != "OK":
             continue
-        cfg = get_arch(art["arch"])
-        shape = get_shape(art["shape"])
+        cfg = preset.arch(art["arch"])
+        shape = preset.shape(art["shape"])
         mesh = meshes[art["mesh"]]
         model_axis = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
         recipe = default_recipe(cfg, shape, model_axis)
@@ -57,5 +57,15 @@ def main(out_dir: str = ARTIFACT_DIR):
               f"dom={art['roofline']['dominant']}", flush=True)
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="full", choices=sorted(PRESETS))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    preset = get_preset(args.preset)
+    preset.ensure_host_devices()
+    reprobe(preset, args.out)
+
+
 if __name__ == "__main__":
-    main(*sys.argv[1:])
+    main()

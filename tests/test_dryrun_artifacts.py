@@ -1,57 +1,129 @@
-"""Dry-run artifact contract (deliverable e): all 80 cells present,
+"""Dry-run artifact contract, per scale preset: all 80 cells present,
 parse, none FAILed, skips exactly match the assignment rules, roofline
-terms populated, and memory fits per chip for serving cells."""
+terms populated, and memory fits per chip for serving cells (full
+preset; ci cells are smoke-scale and trivially fit).
+
+The contract is preset-independent by design — a preset rescales the
+cells but never changes the census. Whichever presets have generated
+artifacts are validated; generate the cheap one with
+
+    PYTHONPATH=src python -m repro.launch.dryrun --preset ci
+
+(minutes on a CPU-only host). Only when NO preset has artifacts does
+the whole module skip.
+"""
 import json
 import os
 
 import pytest
 
-from repro.configs import ARCHS, SHAPES, get_arch, get_shape, \
-    shape_skip_reason
+from repro.artifacts import dryrun_dir, list_cells, manifest_path
+from repro.configs import ARCHS, SHAPES, shape_skip_reason
+from repro.launch.presets import PRESETS, get_preset
 
-ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+GEN_HINT = ("generate with: PYTHONPATH=src python -m repro.launch.dryrun "
+            "--preset ci")
 
-pytestmark = pytest.mark.skipif(
-    not os.path.isdir(ART),
-    reason="dry-run artifacts not generated (run repro.launch.dryrun)")
+AVAILABLE = [p for p in sorted(PRESETS) if list_cells(p)]
 
 
-def _load(arch, shape, mesh):
-    path = os.path.join(ART, f"{arch}__{shape}__{mesh}.json")
+def _require(preset):
+    # no module-level skipif: test_loader_raises_without_artifacts must
+    # run precisely when nothing has been generated
+    if preset not in AVAILABLE:
+        pytest.skip(f"no '{preset}' artifacts; {GEN_HINT}")
+
+
+def _load(preset, arch, shape, mesh):
+    path = os.path.join(dryrun_dir(preset),
+                        f"{arch}__{shape}__{mesh}.json")
     assert os.path.exists(path), f"missing cell artifact {path}"
     with open(path) as f:
         return json.load(f)
 
 
+@pytest.mark.parametrize("preset", sorted(PRESETS))
 @pytest.mark.parametrize("mesh", ["single", "multi"])
 @pytest.mark.parametrize("shape", sorted(SHAPES))
 @pytest.mark.parametrize("arch", sorted(ARCHS))
-def test_cell_artifact_contract(arch, shape, mesh):
-    art = _load(arch, shape, mesh)
-    want_skip = shape_skip_reason(get_arch(arch), get_shape(shape))
+def test_cell_artifact_contract(preset, arch, shape, mesh):
+    _require(preset)
+    p = get_preset(preset)
+    art = _load(preset, arch, shape, mesh)
+    assert art.get("preset", preset) == preset
+    want_skip = shape_skip_reason(p.arch(arch), p.shape(shape))
     if want_skip:
         assert art["status"] == "SKIP"
         assert art["reason"] == want_skip
         return
     assert art["status"] == "OK", art.get("error")
-    assert art["devices"] == (512 if mesh == "multi" else 256)
+    assert art["devices"] == p.mesh_spec(mesh).devices
+    assert art["mesh_axes"] == p.mesh_spec(mesh).axis_sizes()
     r = art["roofline"]
     for term in ("compute_s", "memory_s", "collective_s"):
         assert r[term] >= 0.0
     assert r["dominant"] in ("compute_s", "memory_s", "collective_s")
     assert r["model_flops"] > 0
-    # serving cells: bf16 weights + cache must fit per-chip HBM
-    if get_shape(shape).kind in ("decode",):
+    assert art["cost"]["flops"] > 0
+    # serving cells at production scale: bf16 weights + cache must fit
+    # per-chip HBM (smoke-scale ci cells fit by many orders of magnitude)
+    if preset == "full" and p.shape(shape).kind in ("decode",):
         args = art["memory"]["argument_bytes"]
         assert args < 16 * 2**30, \
             f"{arch}/{shape}/{mesh}: {args/2**30:.1f} GiB args > HBM"
 
 
-def test_counts():
-    names = [n for n in os.listdir(ART) if n.endswith(".json")]
-    assert len(names) == 80
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_counts(preset):
+    _require(preset)
+    names = list_cells(preset)
+    assert len(names) == 2 * len(ARCHS) * len(SHAPES)   # 80-cell census
     stats = {"OK": 0, "SKIP": 0, "FAIL": 0}
     for n in names:
-        with open(os.path.join(ART, n)) as f:
+        with open(os.path.join(dryrun_dir(preset), n)) as f:
             stats[json.load(f)["status"]] += 1
     assert stats == {"OK": 64, "SKIP": 16, "FAIL": 0}
+
+
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_manifest(preset):
+    _require(preset)
+    path = manifest_path(preset)
+    assert os.path.exists(path), \
+        f"missing {path} (partial sweep? regenerate the full preset)"
+    with open(path) as f:
+        manifest = json.load(f)
+    p = get_preset(preset)
+    assert manifest["preset"] == preset
+    assert manifest["counts"]["FAIL"] == 0
+    for name, spec in p.meshes.items():
+        assert manifest["meshes"][name]["devices"] == spec.devices
+    for name, s in p.shapes.items():
+        m = manifest["shapes"][name]
+        assert (m["seq_len"], m["global_batch"], m["kind"]) == \
+            (s.seq_len, s.global_batch, s.kind)
+
+
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_loader_round_trip(preset):
+    """benchmarks.common.load_dryrun_artifacts sees exactly the cells
+    the contract counts, tagged with their preset."""
+    _require(preset)
+    from benchmarks.common import load_dryrun_artifacts
+
+    rows = load_dryrun_artifacts("single", preset)
+    assert len(rows) == len(ARCHS) * len(SHAPES)
+    assert all(a["preset"] == preset for a in rows)
+
+
+def test_loader_raises_without_artifacts(tmp_path, monkeypatch):
+    """The seed returned [] silently; now absence is an error that names
+    the generation command."""
+    from benchmarks.common import DryRunArtifactsMissing, \
+        load_dryrun_artifacts
+
+    monkeypatch.setenv("REPRO_ARTIFACT_DIR", str(tmp_path))
+    with pytest.raises(DryRunArtifactsMissing, match="--preset ci"):
+        load_dryrun_artifacts("single")
+    with pytest.raises(DryRunArtifactsMissing, match="--preset ci"):
+        load_dryrun_artifacts("single", "ci")

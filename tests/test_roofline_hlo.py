@@ -1,0 +1,111 @@
+"""Unit coverage for ``repro.core.roofline.collective_bytes_from_hlo``:
+per-kind ring-scaling factors, brace vs iota ``replica_groups`` forms,
+``source_target_pairs`` (collective-permute carries no replica_groups),
+async -start/-done pairs, and trivial-group suppression.
+
+Fixture lines mirror optimized-HLO syntax from the XLA CPU backend (the
+same text ``compiled.as_text()`` feeds the dry-run artifact pipeline).
+"""
+import pytest
+
+from repro.core.roofline import collective_bytes_from_hlo
+
+
+def _one(kind, hlo):
+    out = collective_bytes_from_hlo(hlo)
+    assert out["op_counts"][kind] == 1, out
+    assert out["total"] == pytest.approx(out[kind])
+    return out[kind]
+
+
+def test_all_reduce_brace_groups_bidirectional_ring():
+    hlo = ("  %all-reduce.1 = f32[128,256]{1,0} all-reduce("
+           "f32[128,256]{1,0} %p0), channel_id=1, "
+           "replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add")
+    rb = 128 * 256 * 4
+    # all-reduce moves 2(n-1)/n of the payload through each chip
+    assert _one("all-reduce", hlo) == pytest.approx(2 * 3 / 4 * rb)
+
+
+def test_all_gather_iota_groups():
+    hlo = ("  %ag = bf16[32,1024]{1,0} all-gather(bf16[2,1024]{1,0} %x), "
+           "channel_id=2, replica_groups=[8,16]<=[128], dimensions={0}, "
+           "use_global_device_ids=true")
+    rb = 32 * 1024 * 2                    # result is the gathered tensor
+    assert _one("all-gather", hlo) == pytest.approx(15 / 16 * rb)
+
+
+def test_reduce_scatter_result_is_shard():
+    hlo = ("  %rs = f32[4,128]{1,0} reduce-scatter(f32[32,128]{1,0} %x), "
+           "channel_id=3, replica_groups={{0,1,2,3,4,5,6,7}}, "
+           "dimensions={0}, to_apply=%add")
+    rb = 4 * 128 * 4                      # result is the per-chip shard
+    assert _one("reduce-scatter", hlo) == pytest.approx(7 * rb)
+
+
+def test_all_to_all_ring_factor():
+    hlo = ("  %a2a = f32[16,64]{1,0} all-to-all(f32[16,64]{1,0} %x), "
+           "channel_id=4, replica_groups={{0,1,2,3}}, dimensions={0}")
+    rb = 16 * 64 * 4
+    assert _one("all-to-all", hlo) == pytest.approx(3 / 4 * rb)
+
+
+def test_collective_permute_source_target_pairs():
+    # collective-permute names source_target_pairs, NOT replica_groups —
+    # the seed parser required the latter and silently dropped these
+    hlo = ("  %cp = bf16[8,128]{1,0} collective-permute("
+           "bf16[8,128]{1,0} %x), channel_id=5, "
+           "source_target_pairs={{0,1},{1,2},{2,3},{3,0}}")
+    rb = 8 * 128 * 2
+    assert _one("collective-permute", hlo) == pytest.approx(rb)
+
+
+def test_start_counted_done_ignored():
+    hlo = "\n".join([
+        "  %ar-s = f32[64]{0} all-reduce-start(f32[64]{0} %x), "
+        "channel_id=6, replica_groups={{0,1}}, to_apply=%add",
+        "  %ar-d = f32[64]{0} all-reduce-done(f32[64]{0} %ar-s), "
+        "channel_id=6, replica_groups={{0,1}}",
+    ])
+    out = collective_bytes_from_hlo(hlo)
+    assert out["op_counts"]["all-reduce"] == 1
+    assert out["all-reduce"] == pytest.approx(2 * 1 / 2 * 64 * 4)
+
+
+def test_trivial_group_suppressed():
+    hlo = ("  %ar = f32[64]{0} all-reduce(f32[64]{0} %x), channel_id=7, "
+           "replica_groups={{0}}, to_apply=%add")
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-reduce"] == 0.0
+    assert out["op_counts"]["all-reduce"] == 0
+    assert out["total"] == 0.0
+
+
+def test_non_collective_lines_ignored():
+    hlo = "\n".join([
+        "  %fusion.1 = f32[128,128]{1,0} fusion(f32[128,128]{1,0} %x), "
+        "kind=kLoop, calls=%fused_computation",
+        "  %dot.2 = f32[128,128]{1,0} dot(f32[128,128]{1,0} %a, "
+        "f32[128,128]{1,0} %b), lhs_contracting_dims={1}, "
+        "rhs_contracting_dims={0}",
+    ])
+    out = collective_bytes_from_hlo(hlo)
+    assert out["total"] == 0.0
+    assert all(v == 0 for v in out["op_counts"].values())
+
+
+def test_mixed_module_accumulates_per_kind():
+    hlo = "\n".join([
+        "  %ar1 = f32[100]{0} all-reduce(f32[100]{0} %a), "
+        "replica_groups={{0,1,2,3}}, to_apply=%add",
+        "  %ar2 = bf16[50]{0} all-reduce(bf16[50]{0} %b), "
+        "replica_groups={{0,1,2,3}}, to_apply=%add",
+        "  %cp = f32[10]{0} collective-permute(f32[10]{0} %c), "
+        "source_target_pairs={{0,1},{1,0}}",
+    ])
+    out = collective_bytes_from_hlo(hlo)
+    assert out["op_counts"]["all-reduce"] == 2
+    want_ar = 2 * 3 / 4 * (100 * 4) + 2 * 3 / 4 * (50 * 2)
+    assert out["all-reduce"] == pytest.approx(want_ar)
+    assert out["collective-permute"] == pytest.approx(10 * 4)
+    assert out["total"] == pytest.approx(want_ar + 10 * 4)
