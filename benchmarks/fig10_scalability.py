@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from repro.core.dse.engine import benchmark_paradigm
 from repro.core.hardware import KU115
-from repro.core.workload import vgg16_conv
+from repro.core.workload import get_workload
 
 from benchmarks.common import emit
 
@@ -19,10 +19,10 @@ def run():
     rows = []
     gops = {p: {} for p in (1, 2, 3)}
     for depth, extra in DEPTHS.items():
-        layers = vgg16_conv(224, extra_per_group=extra)
+        wl = get_workload("vgg16", input_size=224, extra_per_group=extra)
         row = {"layers": depth}
         for p in (1, 2, 3):
-            r = benchmark_paradigm(layers, KU115, p, batch=1)
+            r = benchmark_paradigm(wl, KU115, p, batch=1)
             gops[p][depth] = r.gops
             row[f"p{p}_gops"] = r.gops
         rows.append(row)

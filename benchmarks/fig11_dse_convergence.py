@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from repro.core.dse import explore_fpga
 from repro.core.hardware import KU115, ZC706
-from repro.core.workload import alexnet, resnet18, resnet34
+from repro.core.workload import get_workload
 
 from benchmarks.common import emit
 
@@ -28,10 +28,10 @@ PAPER = {
 
 def run(n_particles: int = 16, n_iters: int = 20):
     rows = []
-    for nm, fn in (("resnet18", resnet18), ("resnet34", resnet34),
-                   ("alexnet", alexnet)):
+    for nm in ("resnet18", "resnet34", "alexnet"):
+        wl = get_workload(nm, input_size=224)
         for spec in (KU115, ZC706):
-            res = explore_fpga(fn(224), spec, n_particles=n_particles,
+            res = explore_fpga(wl, spec, n_particles=n_particles,
                                n_iters=n_iters, max_batch=64)
             s = res.search
             hist = res.gops_trace

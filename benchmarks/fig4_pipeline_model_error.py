@@ -3,12 +3,14 @@ cycle-approximate event simulator (the board stand-in).
 
 Paper: avg 1.15% error between estimated and board-level performance
 across AlexNet/ZF/VGG16/YOLO at 16- and 8-bit on ZC706 + KU115.
+
+Workloads come from the registry (CNN front-end of the Workload IR).
 """
 from __future__ import annotations
 
 from repro.core.analytical.pipeline import pipeline_performance
 from repro.core.hardware import KU115, ZC706
-from repro.core.workload import alexnet, vgg16_conv, yolo_tiny, zfnet
+from repro.core.workload import get_workload
 from repro.sim.simulator import simulate_pipeline
 
 from benchmarks.common import emit
@@ -17,18 +19,18 @@ from benchmarks.common import emit
 # (b) KU115: N1-N4 = AlexNet/ZF/VGG16/YOLO @16b, N5-N8 same @8b
 CASES = []
 for bits in (16, 8):
-    for nm, fn, sz in (("alexnet", alexnet, 224), ("zf", zfnet, 224),
-                       ("yolo", yolo_tiny, 448)):
-        CASES.append(("ZC706", ZC706, nm, fn, sz, bits))
-    for nm, fn, sz in (("alexnet", alexnet, 224), ("zf", zfnet, 224),
-                       ("vgg16", vgg16_conv, 224), ("yolo", yolo_tiny, 448)):
-        CASES.append(("KU115", KU115, nm, fn, sz, bits))
+    for nm, sz in (("alexnet", 224), ("zf", 224), ("yolo", 448)):
+        CASES.append(("ZC706", ZC706, nm, sz, bits))
+    for nm, sz in (("alexnet", 224), ("zf", 224), ("vgg16", 224),
+                   ("yolo", 448)):
+        CASES.append(("KU115", KU115, nm, sz, bits))
 
 
 def run(batch: int = 2):
     rows = []
-    for board, spec, nm, fn, sz, bits in CASES:
-        d = pipeline_performance(fn(sz), spec, batch=batch,
+    for board, spec, nm, sz, bits in CASES:
+        wl = get_workload(nm, input_size=sz, abits=bits, wbits=bits)
+        d = pipeline_performance(wl, spec, batch=batch,
                                  wbits=bits, abits=bits)
         if not d.feasible:
             continue

@@ -3,12 +3,14 @@ simulator over 36 CONV cases — fmap (56,112,224) x channels
 (64,128,256,512) x kernel (1,3,5) on VU9P.
 
 Paper: 2.17% average error vs board measurements.
+
+Each case is the registry's ``conv_case`` workload (CNN front-end).
 """
 from __future__ import annotations
 
 from repro.core.analytical.generic import generic_dse
 from repro.core.hardware import VU9P
-from repro.core.workload import ConvLayer
+from repro.core.workload import get_workload
 from repro.sim.simulator import simulate_generic
 
 from benchmarks.common import emit
@@ -19,8 +21,8 @@ def run():
     for fm in (56, 112, 224):
         for ch in (64, 128, 256, 512):
             for k in (1, 3, 5):
-                layer = ConvLayer(f"c{fm}_{ch}_{k}", fm, fm, ch, ch, k, k)
-                d = generic_dse([layer], VU9P)
+                wl = get_workload("conv_case", fmap=fm, cin=ch, k=k)
+                d = generic_dse(wl, VU9P)
                 s = simulate_generic(d, VU9P)
                 err = (d.gops() - s.gops) / s.gops * 100
                 rows.append({"fmap": fm, "ch": ch, "k": k,

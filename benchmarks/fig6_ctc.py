@@ -2,10 +2,13 @@
 of VGG-16 CONV layers across 12 input resolutions.
 
 Paper: CTC medians rise ~256x from 32x32 to 512x512 inputs.
+
+``Workload.ctc_stats`` (the IR's per-op CTC) replaces the old
+free-standing helper over ConvLayer lists.
 """
 from __future__ import annotations
 
-from repro.core.workload import INPUT_SIZE_CASES, ctc_stats, vgg16_conv
+from repro.core.workload import INPUT_SIZE_CASES, get_workload
 
 from benchmarks.common import emit
 
@@ -13,7 +16,7 @@ from benchmarks.common import emit
 def run():
     rows = []
     for sz in INPUT_SIZE_CASES:
-        stats = ctc_stats(vgg16_conv(sz))
+        stats = get_workload("vgg16", input_size=sz).ctc_stats()
         rows.append({"input": sz, **stats})
     growth = rows[-1]["median"] / rows[0]["median"]
     emit("fig6_ctc", rows)

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from repro.core.dse.engine import benchmark_paradigm
 from repro.core.hardware import KU115
-from repro.core.workload import INPUT_SIZE_CASES, vgg16_conv
+from repro.core.workload import INPUT_SIZE_CASES, get_workload
 
 from benchmarks.common import emit
 
@@ -17,10 +17,10 @@ from benchmarks.common import emit
 def run(n_cases: int = 12):
     rows = []
     for i, sz in enumerate(INPUT_SIZE_CASES[:n_cases]):
-        layers = vgg16_conv(sz)
+        wl = get_workload("vgg16", input_size=sz)
         effs = {}
         for p in (1, 2, 3):
-            r = benchmark_paradigm(layers, KU115, p, batch=1, seed=i)
+            r = benchmark_paradigm(wl, KU115, p, batch=1, seed=i)
             effs[p] = r.dsp_eff
         rows.append({"case": i + 1, "input": sz,
                      "p1_eff": effs[1], "p2_eff": effs[2],

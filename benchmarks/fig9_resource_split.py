@@ -8,27 +8,25 @@ from __future__ import annotations
 
 from repro.core.analytical.pipeline import pipeline_dsp_used
 from repro.core.analytical.generic import generic_dsp_used
-from repro.core.dse.engine import explore_fpga
+from repro.core.dse.engine import benchmark_paradigm, explore_fpga
 from repro.core.hardware import KU115
-from repro.core.workload import INPUT_SIZE_CASES, vgg16_conv
+from repro.core.workload import INPUT_SIZE_CASES, get_workload
 
 from benchmarks.common import emit
 
 
 def run(n_cases: int = 12):
-    from repro.core.dse.engine import benchmark_paradigm
-
     rows = []
     for i, sz in enumerate(INPUT_SIZE_CASES[:n_cases]):
-        layers = vgg16_conv(sz)
-        res = explore_fpga(layers, KU115, batch=1, fix_batch=True,
+        wl = get_workload("vgg16", input_size=sz)
+        res = explore_fpga(wl, KU115, batch=1, fix_batch=True,
                            n_particles=12, n_iters=12, seed=i)
         d = res.best_design
         dsp_p = pipeline_dsp_used(d.pipeline, KU115) if d.pipeline else 0.0
         dsp_g = (generic_dsp_used(d.generic, KU115)
                  if d.generic and d.generic.dataflows else 0.0)
-        p1 = benchmark_paradigm(layers, KU115, 1, batch=1).gops
-        p2 = benchmark_paradigm(layers, KU115, 2, batch=1).gops
+        p1 = benchmark_paradigm(wl, KU115, 1, batch=1).gops
+        p2 = benchmark_paradigm(wl, KU115, 2, batch=1).gops
         rows.append({"case": i + 1, "input": sz, "sp": d.sp,
                      "dsp_pipeline": dsp_p, "dsp_generic": dsp_g,
                      "pipe_share": dsp_p / max(dsp_p + dsp_g, 1e-9),

@@ -127,6 +127,7 @@ def _analytic_memory_s(art):
     Compute and collective terms stay *measured* (HLO op counts are
     reliable); only the memory term is substituted."""
     from repro.core.analytical.tpu_model import analyze
+    from repro.core.workload import lm_workload
     from repro.launch.presets import get_preset
 
     from benchmarks.roofline_table import plan_from_artifact
@@ -134,7 +135,8 @@ def _analytic_memory_s(art):
     pset = get_preset(art.get("preset", "full"))
     cfg = pset.arch(art["arch"])
     shape = pset.shape(art["shape"])
-    return analyze(cfg, shape, plan_from_artifact(cfg, shape, art)).memory_s
+    wl = lm_workload(cfg, shape)
+    return analyze(wl, plan_from_artifact(cfg, shape, art)).memory_s
 
 
 def summarize(art):

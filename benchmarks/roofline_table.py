@@ -9,6 +9,7 @@ there are none.
 from __future__ import annotations
 
 from repro.core.analytical.tpu_model import ShardPlan, TPUPlan, analyze
+from repro.core.workload import lm_workload
 from repro.launch.presets import get_preset
 
 from benchmarks.common import emit, load_dryrun_artifacts, resolve_preset
@@ -45,7 +46,8 @@ def run(mesh: str = "single", preset: str = None):
         r = art["roofline"]
         cfg = pset.arch(art["arch"])
         shape = pset.shape(art["shape"])
-        pred = analyze(cfg, shape, plan_from_artifact(cfg, shape, art))
+        wl = lm_workload(cfg, shape)          # the cell's IR profile
+        pred = analyze(wl, plan_from_artifact(cfg, shape, art))
         rows.append({
             "arch": art["arch"], "shape": art["shape"], "status": "OK",
             "compute_s": r["compute_s"], "memory_s": r["memory_s"],

@@ -1,11 +1,77 @@
 """Benchmark driver: one module per paper table/figure + the TPU-domain
 roofline/model reports. ``python -m benchmarks.run [--quick]``.
+
+``--list`` prints the available benchmark names; every run writes a
+machine-readable ``<artifacts>/bench/results.json`` (per-benchmark
+metrics + wall seconds) so the perf trajectory is tracked across PRs
+(CI uploads it as an artifact).
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import json
+import os
 import sys
 import time
+
+
+def build_benches(quick: bool = False) -> list:
+    """The single source of truth: (name, module, entry, args, kwargs).
+
+    Modules are imported lazily at execution time, so ``--list`` stays
+    cheap and a name here is always both listable and runnable.
+    """
+    n_cases = 6 if quick else 12
+    fig11_kw = {"n_particles": 12, "n_iters": 12} if quick else {}
+    return [
+        ("fig4", "fig4_pipeline_model_error", "run", (), {}),
+        ("fig5", "fig5_generic_model_error", "run", (), {}),
+        ("fig6", "fig6_ctc", "run", (), {}),
+        ("fig8", "fig8_dsp_efficiency", "run", (n_cases,), {}),
+        ("fig9", "fig9_resource_split", "run", (n_cases,), {}),
+        ("fig10", "fig10_scalability", "run", (), {}),
+        ("fig11", "fig11_dse_convergence", "run", (), fig11_kw),
+        # dry-run consumers: need artifacts (repro.launch.dryrun);
+        # they raise with the generation command when none exist
+        ("roofline", "roofline_table", "run_all_meshes", (), {}),
+        ("tpu_model", "tpu_model_error", "run", (), {}),
+    ]
+
+
+def benchmark_names() -> list:
+    return [b[0] for b in build_benches()]
+
+
+def write_results(results: dict, quick: bool = False,
+                  only: str = None) -> str:
+    """Persist the per-benchmark metric dicts + timings as JSON.
+
+    Records the run mode (quick/only + the full roster) so trajectory
+    consumers never compare a 2-benchmark quick run against a full one.
+    """
+    from repro.artifacts import bench_dir
+
+    os.makedirs(bench_dir(), exist_ok=True)
+    path = os.path.join(bench_dir(), "results.json")
+    results = {k: {**r, "pass": bool(r.get("pass"))}
+               for k, r in results.items()}
+    payload = {
+        "generated_unix": time.time(),
+        "quick": bool(quick),
+        "only": sorted(only.split(",")) if only else None,
+        "available": benchmark_names(),
+        "ran": sorted(results),
+        "benchmarks": results,
+        "pass": all(r["pass"] for r in results.values()),
+    }
+
+    def _default(o):                    # numpy scalars -> plain numbers
+        return o.item() if hasattr(o, "item") else str(o)
+
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=_default)
+    return path
 
 
 def main() -> None:
@@ -14,56 +80,41 @@ def main() -> None:
                     help="fewer DSE cases for fig8/9, smaller fig11 swarm")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--list", action="store_true",
+                    help="print available benchmark names and exit")
     args = ap.parse_args()
 
-    from benchmarks import (
-        fig4_pipeline_model_error,
-        fig5_generic_model_error,
-        fig6_ctc,
-        fig8_dsp_efficiency,
-        fig9_resource_split,
-        fig10_scalability,
-        fig11_dse_convergence,
-        roofline_table,
-        tpu_model_error,
-    )
+    if args.list:
+        for n in benchmark_names():
+            print(n)
+        return
 
-    n_cases = 6 if args.quick else 12
-    fig11_kw = ({"n_particles": 12, "n_iters": 12} if args.quick else {})
-    benches = [
-        ("fig4", lambda: fig4_pipeline_model_error.run()),
-        ("fig5", lambda: fig5_generic_model_error.run()),
-        ("fig6", lambda: fig6_ctc.run()),
-        ("fig8", lambda: fig8_dsp_efficiency.run(n_cases)),
-        ("fig9", lambda: fig9_resource_split.run(n_cases)),
-        ("fig10", lambda: fig10_scalability.run()),
-        ("fig11", lambda: fig11_dse_convergence.run(**fig11_kw)),
-        # dry-run consumers: need artifacts (repro.launch.dryrun);
-        # they raise with the generation command when none exist
-        ("roofline", lambda: roofline_table.run_all_meshes()),
-        ("tpu_model", lambda: tpu_model_error.run()),
-    ]
+    benches = build_benches(args.quick)
     if args.only:
         names = set(args.only.split(","))
-        unknown = names - {n for n, _ in benches}
+        unknown = names - {b[0] for b in benches}
         if unknown:
             sys.exit(f"unknown benchmark(s): {sorted(unknown)}; "
-                     f"available: {[n for n, _ in benches]}")
-        benches = [(n, f) for n, f in benches if n in names]
+                     f"available: {benchmark_names()}")
+        benches = [b for b in benches if b[0] in names]
 
     results = {}
     t_all = time.time()
-    for name, fn in benches:
+    for name, mod, entry, b_args, b_kwargs in benches:
         t0 = time.time()
         try:
-            results[name] = fn()
+            fn = getattr(importlib.import_module(f"benchmarks.{mod}"),
+                         entry)
+            results[name] = fn(*b_args, **b_kwargs)
             results[name]["seconds"] = round(time.time() - t0, 1)
         except Exception as e:                        # noqa: BLE001
             results[name] = {"pass": False,
+                             "seconds": round(time.time() - t0, 1),
                              "error": f"{type(e).__name__}: {e}"}
             import traceback
             traceback.print_exc()
 
+    path = write_results(results, quick=args.quick, only=args.only)
     print("\n==== SUMMARY ====")
     ok = True
     for name, r in results.items():
@@ -72,7 +123,7 @@ def main() -> None:
         extra = {k: v for k, v in r.items()
                  if k not in ("pass",) and not isinstance(v, (list, dict))}
         print(f"{status:4s} {name:18s} {extra}")
-    print(f"total {time.time() - t_all:.0f}s")
+    print(f"total {time.time() - t_all:.0f}s -> {path}")
     sys.exit(0 if ok else 1)
 
 

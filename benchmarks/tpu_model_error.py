@@ -15,6 +15,7 @@ there are none.
 from __future__ import annotations
 
 from repro.core.analytical.tpu_model import analyze
+from repro.core.workload import lm_workload
 from repro.launch.presets import get_preset
 
 from benchmarks.common import emit, load_dryrun_artifacts, resolve_preset
@@ -30,7 +31,8 @@ def run(mesh: str = "single", preset: str = None):
             continue
         cfg = pset.arch(art["arch"])
         shape = pset.shape(art["shape"])
-        pred = analyze(cfg, shape, plan_from_artifact(cfg, shape, art))
+        wl = lm_workload(cfg, shape)          # the cell's IR profile
+        pred = analyze(wl, plan_from_artifact(cfg, shape, art))
         meas = art["roofline"]["compute_s"]
         ratio = meas / max(pred.compute_s, 1e-12)
         rows.append({"arch": art["arch"], "shape": art["shape"],

@@ -13,19 +13,19 @@ latency, efficiency) Pareto frontier.
 from repro.configs import get_arch, get_shape
 from repro.core.dse import benchmark_paradigm, explore_fpga, explore_tpu
 from repro.core.hardware import KU115
-from repro.core.workload import vgg16_conv
+from repro.core.workload import get_workload
 
 print("== Fig. 10: deeper DNNs (13 -> 38 CONV layers) ==")
 for extra, depth in ((0, 13), (1, 18), (3, 28), (5, 38)):
-    layers = vgg16_conv(224, extra_per_group=extra)
+    wl = get_workload("vgg16", input_size=224, extra_per_group=extra)
     row = [f"{depth}L"]
     for p in (1, 2, 3):
-        r = benchmark_paradigm(layers, KU115, p, batch=1)
+        r = benchmark_paradigm(wl, KU115, p, batch=1)
         row.append(f"p{p}={r.gops:7.1f}")
     print("  " + "  ".join(row))
 
 print("\n== Fig. 11-style DSE trace (VGG16 / KU115) ==")
-res = explore_fpga(vgg16_conv(224), KU115, n_particles=16, n_iters=12)
+res = explore_fpga(get_workload("vgg16"), KU115, n_particles=16, n_iters=12)
 for i, (g, sp, b) in enumerate(zip(res.gops_trace, res.sp_trace,
                                    res.batch_trace)):
     print(f"  iter {i:2d}: best {g:7.1f} GOP/s  (SP={sp}, batch={b})")

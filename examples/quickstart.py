@@ -1,6 +1,7 @@
 """Quickstart: the full Being-ahead / DNNExplorer flow in one minute.
 
-1. benchmark the two established accelerator paradigms for a DNN,
+1. pull a workload from the registry (the Workload IR every subsystem
+   consumes) and benchmark the two established accelerator paradigms,
 2. explore the paper's hybrid paradigm with the two-level DSE,
 3. do the same for a TPU pod: profile an assigned LM architecture,
    run the TPU DSE over sharding plans, print the predicted roofline.
@@ -11,15 +12,16 @@ from repro.configs import get_arch, get_shape
 from repro.core.dse.engine import benchmark_paradigm, explore_fpga
 from repro.core.dse.tpu_engine import explore_tpu
 from repro.core.hardware import KU115
-from repro.core.workload import resnet18
+from repro.core.workload import get_workload
 
 print("== step 1-2: FPGA-domain benchmarking (the paper's own flow) ==")
-layers = resnet18(224)
+wl = get_workload("resnet18", input_size=224)
+print(f"workload: {wl.describe()}")
 for p in (1, 2):
-    r = benchmark_paradigm(layers, KU115, p, batch=1)
+    r = benchmark_paradigm(wl, KU115, p, batch=1)
     print(f"paradigm {p}: {r.gops:7.1f} GOP/s, DSP efficiency {r.dsp_eff:.2f}")
 
-res = explore_fpga(layers, KU115, n_particles=12, n_iters=12)
+res = explore_fpga(wl, KU115, n_particles=12, n_iters=12)
 d = res.best_design
 print(f"paradigm 3 (two-level DSE): {d.gops():7.1f} GOP/s "
       f"(SP={d.sp}, batch={d.batch}) — converged in "
@@ -29,6 +31,8 @@ print(f"paradigm 3 (two-level DSE): {d.gops():7.1f} GOP/s "
 print("\n== step 3: the same technique on a TPU-pod (256 x v5e) ==")
 cfg = get_arch("chatglm3-6b")
 shape = get_shape("train_4k")
+lm = get_workload("chatglm3-6b/train_4k")
+print(f"workload: {lm.describe()}")
 t = explore_tpu(cfg, shape, n_particles=10, n_iters=10)
 a = t.best_analysis
 print(f"{cfg.name} x {shape.name}: best plan SP={t.best_plan.sp} "

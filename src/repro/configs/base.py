@@ -173,6 +173,11 @@ class ShapeConfig:
     seq_len: int
     global_batch: int
     kind: str            # train | prefill | decode
+    # decode-only: KV-cache length when it differs from seq_len (e.g. a
+    # decode step against a 128k cache). None -> seq_len. The LM
+    # front-end threads this through to the per-op profile and the HBM
+    # footprint gate.
+    kv_len: Optional[int] = None
 
 
 SHAPES = {

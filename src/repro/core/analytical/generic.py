@@ -13,7 +13,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.hardware import FPGASpec
-from repro.core.workload import ConvLayer
+from repro.core.workload import ConvLayer, Workload, as_conv_layers
 
 
 @dataclass(frozen=True)
@@ -131,9 +131,14 @@ def generic_dse(
     lut_budget: Optional[float] = None,
 ) -> GenericDesign:
     """Algorithm 3 (all three STEPs), vectorized over the param lattice
-    with numpy — the PSO fitness calls this hundreds of times."""
+    with numpy — the PSO fitness calls this hundreds of times.
+
+    ``layers`` may be a :class:`Workload` (CNN front-end) or a legacy
+    ConvLayer sequence.
+    """
     import numpy as np
 
+    layers = as_conv_layers(layers)
     dsp_total = spec.dsp if dsp_budget is None else dsp_budget
     bram_total = spec.bram_bytes if bram_budget is None else bram_budget
     bw_total = spec.bw_bytes if bw_budget is None else bw_budget
@@ -219,13 +224,16 @@ class GenericModel:
     """Paradigm 2 behind the shared :class:`AcceleratorModel` protocol.
 
     Knobs: ``batch``. Algorithm 3 (STEP1-3) runs inside ``evaluate``.
+    Consumes the :class:`Workload` IR (CNN front-end); bare ConvLayer
+    sequences are coerced for back-compat.
     """
 
     name = "generic"
 
-    def __init__(self, layers: Sequence[ConvLayer], spec: FPGASpec,
+    def __init__(self, workload, spec: FPGASpec,
                  wbits: int = 16, abits: int = 16):
-        self.layers = list(layers)
+        self.workload = Workload.coerce(workload)
+        self.layers = self.workload.conv_layers()
         self.spec = spec
         self.wbits = wbits
         self.abits = abits

@@ -22,7 +22,7 @@ from repro.core.analytical.pipeline import (
     pipeline_performance,
 )
 from repro.core.hardware import FPGASpec
-from repro.core.workload import ConvLayer
+from repro.core.workload import ConvLayer, Workload, as_conv_layers
 
 
 @dataclass
@@ -96,7 +96,12 @@ def hybrid_performance(
     abits: int = 16,
 ) -> HybridDesign:
     """Evaluate one RAV = [SP, Batch, DSP_p, BRAM_p, BW_p] (level-2 of the
-    DSE runs inside: Algs 1+2 for the front, Alg 3 for the tail)."""
+    DSE runs inside: Algs 1+2 for the front, Alg 3 for the tail).
+
+    ``layers`` may be a :class:`Workload` (CNN front-end) or a legacy
+    ConvLayer sequence.
+    """
+    layers = as_conv_layers(layers)
     sp = max(0, min(sp, len(layers)))
     front, tail = layers[:sp], layers[sp:]
     if dsp_p is None:
@@ -142,9 +147,10 @@ class HybridModel:
 
     name = "hybrid"
 
-    def __init__(self, layers: Sequence[ConvLayer], spec: FPGASpec,
+    def __init__(self, workload, spec: FPGASpec,
                  wbits: int = 16, abits: int = 16):
-        self.layers = list(layers)
+        self.workload = Workload.coerce(workload)
+        self.layers = self.workload.conv_layers()
         self.spec = spec
         self.wbits = wbits
         self.abits = abits

@@ -17,7 +17,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
 from repro.core.hardware import FPGASpec
-from repro.core.workload import ConvLayer
+from repro.core.workload import ConvLayer, Workload, as_conv_layers
 
 
 # Logic-overhead model: every dedicated pipeline stage instantiates its
@@ -148,6 +148,7 @@ def allocate_compute(
     pf_total: int,
 ) -> List[StageConfig]:
     """Algorithm 1. pf_total = DSP budget x MACs/DSP/cycle."""
+    layers = as_conv_layers(layers)
     c = [l.macs for l in layers]
     c_total = float(sum(c))
     stages = [StageConfig(l) for l in layers]
@@ -295,7 +296,12 @@ def pipeline_performance(
     bw_budget: Optional[float] = None,
     lut_budget: Optional[float] = None,
 ) -> PipelineDesign:
-    """Full paradigm-1 optimization + evaluation."""
+    """Full paradigm-1 optimization + evaluation.
+
+    ``layers`` may be a :class:`~repro.core.workload.Workload` (CNN
+    front-end) or a legacy ConvLayer sequence.
+    """
+    layers = as_conv_layers(layers)
     dsp = spec.dsp if dsp_budget is None else dsp_budget
     lut = spec.lut if lut_budget is None else lut_budget
     pf_total = int(dsp * spec.macs_per_dsp(wbits))
@@ -340,13 +346,16 @@ class PipelineModel:
 
     Knobs: ``batch``. Everything else is resolved internally by
     Algorithms 1+2 — the level-2 optimization runs inside ``evaluate``.
+    Consumes the :class:`Workload` IR (CNN front-end); bare ConvLayer
+    sequences are coerced for back-compat.
     """
 
     name = "pipeline"
 
-    def __init__(self, layers: Sequence[ConvLayer], spec: FPGASpec,
+    def __init__(self, workload, spec: FPGASpec,
                  wbits: int = 16, abits: int = 16):
-        self.layers = list(layers)
+        self.workload = Workload.coerce(workload)
+        self.layers = self.workload.conv_layers()
         self.spec = spec
         self.wbits = wbits
         self.abits = abits

@@ -1,10 +1,13 @@
 """TPU-pod analytic performance model — the paper's Eqs. 3-10 rebuilt in
 the mesh-resource vocabulary.
 
-For one (arch, shape, plan) this predicts the three roofline terms per
+For one (workload, plan) this predicts the three roofline terms per
 chip and a step time, **before** any compilation — the fast estimator
 inside the two-level DSE (exactly the role the FPGA analytical models
-play inside Algorithm 4's fitness function).
+play inside Algorithm 4's fitness function). The workload is any
+:class:`~repro.core.workload.Workload` with sharding-axis hints: the
+analytic LM front-end profile by default, or a jaxpr-traced real model
+(``trace_workload``) to explore against executed ops.
 
 Plan = how the work maps onto the (data, model) mesh:
 
@@ -26,7 +29,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.hardware import TPU_V5E, TPUSpec
-from repro.core.workload import OpInfo, lm_block_ops, model_flops
+from repro.core.workload import Op, Workload, lm_workload
 
 
 @dataclass(frozen=True)
@@ -37,7 +40,7 @@ class ShardPlan:
     attn_mode: str = "heads"      # heads | seq  (how attention shards)
     model_axis: int = 16
 
-    def model_shard(self, op: OpInfo) -> int:
+    def model_shard(self, op: Op) -> int:
         """How many ways this op's compute shards over the model axis."""
         n = self.model_axis
         if op.kind == "attention" or op.weight_axis == "heads":
@@ -94,19 +97,33 @@ class TPUAnalysis:
                    key=lambda k: getattr(self, k))
 
 
-def analyze(cfg: ModelConfig, shape: ShapeConfig, plan: TPUPlan,
+def analyze(workload, shape_or_plan=None, plan: Optional[TPUPlan] = None,
             chip: TPUSpec = TPU_V5E, flops_calibration: float = 1.0,
             ) -> TPUAnalysis:
     """Predict per-chip roofline terms for one plan.
+
+    The primary form is ``analyze(workload, plan)`` where ``workload``
+    is any :class:`Workload` whose ops carry sharding-axis hints — the
+    analytic LM profile or a jaxpr-traced real model both qualify, which
+    is what lets the DSE score executable models. The legacy
+    ``analyze(cfg, shape, plan)`` form still works (it builds the LM
+    front-end profile internally).
 
     flops_calibration multiplies raw model flops to absorb systematic
     backend effects (calibrated once against the dry-run artifacts and
     reported in EXPERIMENTS.md §Model-accuracy).
     """
-    ops = lm_block_ops(cfg, shape.seq_len, shape.global_batch, shape.kind)
+    if isinstance(workload, ModelConfig):
+        wl = lm_workload(workload, shape_or_plan)
+    else:
+        wl = Workload.coerce(workload)
+        plan = shape_or_plan if plan is None else plan
+    if not isinstance(plan, TPUPlan):
+        raise TypeError(f"analyze needs a TPUPlan, got {type(plan).__name__}")
+    ops = wl.ops
     dp = plan.dp * plan.pods
     M = max(1, plan.microbatches)
-    is_train = shape.kind == "train"
+    is_train = wl.kind == "train"
     # fwd+bwd(+recompute) flop multiplier
     fmul = 1.0
     if is_train:
@@ -120,7 +137,7 @@ def analyze(cfg: ModelConfig, shape: ShapeConfig, plan: TPUPlan,
     for op in ops:
         sp_plan = plan.front if (0 <= op.layer_idx < plan.sp) else plan.tail
         ms = sp_plan.model_shard(op)
-        shard = dp * ms if op.kind != "embed" else dp * ms
+        shard = dp * ms
         # ---- compute
         f_chip = op.flops * fmul * flops_calibration / shard
         comp += f_chip / peak
@@ -186,15 +203,20 @@ class TPUModel:
     def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
                  dp: int = 16, model_axis: int = 16, pods: int = 1,
                  chip: TPUSpec = TPU_V5E,
-                 flops_calibration: float = 1.0):
+                 flops_calibration: float = 1.0,
+                 workload: Optional[Workload] = None):
         self.cfg = cfg
         self.shape = shape
+        # default: the analytic LM front-end; pass a jaxpr-traced
+        # workload to run the DSE against the real model's op profile
+        self.workload = workload if workload is not None \
+            else lm_workload(cfg, shape)
         self.dp = dp
         self.model_axis = model_axis
         self.pods = pods
         self.chip = chip
         self.flops_calibration = flops_calibration
-        self._model_flops = model_flops(cfg, shape)
+        self._model_flops = self.workload.model_flops()
 
     @property
     def chips(self) -> int:
@@ -233,8 +255,8 @@ class TPUModel:
                 f"HBM overflow: {foot['total'] / 1e9:.1f} GB "
                 f"> {self.chip.hbm_bytes / 1e9:.1f} GB per chip",
                 detail=foot)
-        ana = analyze(self.cfg, self.shape, plan, self.chip,
-                      self.flops_calibration)
+        ana = analyze(self.workload, plan, chip=self.chip,
+                      flops_calibration=self.flops_calibration)
         if ana.step_s <= 0:
             return EvalResult.infeasible("degenerate step time",
                                          detail=ana)
@@ -272,7 +294,11 @@ def hbm_footprint(cfg: ModelConfig, shape: ShapeConfig, plan: TPUPlan,
     else:
         out["params_bf16"] = 2.0 * n_params / ms
         if cfg.family in ("dense", "moe", "vlm"):
-            w = min(cfg.sliding_window or shape.seq_len, shape.seq_len)
+            # decode against a cache longer than seq_len (ShapeConfig.kv_len)
+            cache_len = shape.seq_len
+            if shape.kind == "decode" and getattr(shape, "kv_len", None):
+                cache_len = shape.kv_len
+            w = min(cfg.sliding_window or cache_len, cache_len)
             kv = (cfg.n_layers * shape.global_batch * w
                   * cfg.n_kv_heads * cfg.head_dim * 2 * 2)
             out["kv_cache"] = kv / (dp * (ms if shape.kind == "decode"

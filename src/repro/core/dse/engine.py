@@ -15,7 +15,7 @@ to sharding plans.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Union
+from typing import List, Optional, Union
 
 import numpy as np
 
@@ -27,15 +27,15 @@ from repro.core.dse.pareto import ParetoFront
 from repro.core.dse.search import SearchResult, SearchStrategy, run_search
 from repro.core.dse.space import DesignSpace, Dimension
 from repro.core.hardware import FPGASpec
-from repro.core.workload import ConvLayer
+from repro.core.workload import ConvLayer, Workload, as_conv_layers
 
 
-def fpga_design_space(layers: Sequence[ConvLayer], spec: FPGASpec,
+def fpga_design_space(workload, spec: FPGASpec,
                       batch: Optional[int] = None,
                       max_batch: int = 32) -> DesignSpace:
     """Table-1 design space. A fixed batch becomes a degenerate
     (lo == hi) dimension, so every strategy honors it for free."""
-    n = len(layers)
+    n = len(as_conv_layers(workload))
     b_lo, b_hi = (batch, batch) if batch is not None else (1, max_batch)
     # Partition knobs are lattice-quantized: DSP in column-group
     # slices, BRAM in 16-block groups, bandwidth in 1/64 shares.
@@ -106,7 +106,7 @@ class FPGAExploreResult:
 
 
 def explore_fpga(
-    layers: Sequence[ConvLayer],
+    workload,
     spec: FPGASpec,
     batch: Optional[int] = None,
     max_batch: int = 32,
@@ -118,10 +118,16 @@ def explore_fpga(
     seed: int = 0,
     strategy: Union[str, SearchStrategy] = "pso",
 ) -> FPGAExploreResult:
-    """Level-1 search over the RAV (Algorithm 4 + Table 1 space)."""
+    """Level-1 search over the RAV (Algorithm 4 + Table 1 space).
+
+    ``workload`` is a CNN-frontend :class:`Workload` (legacy ConvLayer
+    sequences are coerced).
+    """
+    wl = Workload.coerce(workload)
+    layers = wl.conv_layers()
     fixed = batch if (fix_batch and batch is not None) else None
-    space = fpga_design_space(layers, spec, fixed, max_batch)
-    model = HybridModel(layers, spec, wbits, abits)
+    space = fpga_design_space(wl, spec, fixed, max_batch)
+    model = HybridModel(wl, spec, wbits, abits)
     res = run_search(
         model, space, strategy=strategy,
         objective=lambda r: r.gops, seed=seed,
@@ -141,7 +147,7 @@ def explore_fpga(
 
 
 def benchmark_paradigm(
-    layers: Sequence[ConvLayer],
+    workload,
     spec: FPGASpec,
     paradigm: int,
     batch: Optional[int] = None,
@@ -158,14 +164,15 @@ def benchmark_paradigm(
     impossible: the old ``fix_batch=batch is not None`` with a default
     of 1 pinned the batch always).
     """
+    wl = Workload.coerce(workload)
     if paradigm == 1:
-        model = PipelineModel(layers, spec, wbits, abits)
+        model = PipelineModel(wl, spec, wbits, abits)
         return model.evaluate(DesignPoint.make(batch=batch or 1))
     if paradigm == 2:
-        model = GenericModel(layers, spec, wbits, abits)
+        model = GenericModel(wl, spec, wbits, abits)
         return model.evaluate(DesignPoint.make(batch=batch or 1))
     if paradigm == 3:
-        res = explore_fpga(layers, spec, batch=batch, wbits=wbits,
+        res = explore_fpga(wl, spec, batch=batch, wbits=wbits,
                            abits=abits, n_iters=12, n_particles=12,
                            fix_batch=batch is not None, seed=seed)
         return res.best_result

@@ -30,13 +30,19 @@ from repro.core.dse.space import DesignSpace, Dimension
 from repro.core.hardware import TPU_V5E, TPUSpec
 
 
-def tpu_design_space(cfg: ModelConfig) -> DesignSpace:
+def tpu_design_space(cfg: ModelConfig,
+                     per_layer: bool = True) -> DesignSpace:
     # dataflow flags are genuine binaries: integer dims so the memo
-    # cache collapses the whole axis to two keys
+    # cache collapses the whole axis to two keys. Workloads without
+    # per-layer attribution (jaxpr traces aggregate ops across the
+    # layer scan, layer_idx=-1) cannot honor a front/tail split, so
+    # sp/front_is collapse to degenerate dims — the search then neither
+    # wastes evaluations on them nor reports noise as tuned values.
+    sp_hi = cfg.n_layers if per_layer else 0
     return DesignSpace.of([
-        Dimension("sp", 0, cfg.n_layers, integer=True),
+        Dimension("sp", 0, sp_hi, integer=True),
         Dimension("log2_m", 0, 6, integer=True),
-        Dimension("front_is", 0, 1, integer=True),
+        Dimension("front_is", 0, 1 if per_layer else 0, integer=True),
         Dimension("tail_is", 0, 1, integer=True),
     ])
 
@@ -59,10 +65,20 @@ def explore_tpu(cfg: ModelConfig, shape: ShapeConfig,
                 chip: TPUSpec = TPU_V5E,
                 flops_calibration: float = 1.0,
                 strategy: Union[str, SearchStrategy] = "pso",
+                workload=None,
                 ) -> TPUExploreResult:
+    """Search sharding plans for one (arch x shape) cell.
+
+    ``workload`` overrides the op profile the model scores — pass a
+    jaxpr-traced :class:`~repro.core.workload.Workload`
+    (``trace_workload(cfg, shape)``) to explore against the real
+    model's executed ops instead of the analytic LM profile.
+    """
     model = TPUModel(cfg, shape, dp=dp, model_axis=model_axis, pods=pods,
-                     chip=chip, flops_calibration=flops_calibration)
-    space = tpu_design_space(cfg)
+                     chip=chip, flops_calibration=flops_calibration,
+                     workload=workload)
+    per_layer = any(o.layer_idx >= 0 for o in model.workload.ops)
+    space = tpu_design_space(cfg, per_layer=per_layer)
     # Warm-start corners (the FPGA engine's pure-paradigm trick, in
     # mesh form): a microbatch ladder under the two structural corners
     # — all-tail IS (weights streamed; how big models fit) and
@@ -88,8 +104,8 @@ def explore_tpu(cfg: ModelConfig, shape: ShapeConfig,
     if not isinstance(best_ana, TPUAnalysis):
         # best point infeasible (tiny search budget): analyze anyway so
         # callers always get roofline terms to report
-        best_ana = analyze(cfg, shape, best_plan, chip,
-                           flops_calibration)
+        best_ana = analyze(model.workload, best_plan, chip=chip,
+                           flops_calibration=flops_calibration)
     return TPUExploreResult(
         best_plan=best_plan,
         best_analysis=best_ana,

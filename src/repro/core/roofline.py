@@ -21,9 +21,8 @@ from __future__ import annotations
 import re
 from typing import Dict, List, Optional
 
-from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.hardware import TPU_V5E, TPUSpec
-from repro.core.workload import model_flops
+from repro.core.workload import Workload
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -121,18 +120,22 @@ def dominant_term(terms: Dict[str, float]) -> str:
                key=lambda k: terms[k])
 
 
-def roofline_report(cfg: ModelConfig, shape: ShapeConfig,
-                    artifact: Dict, chip: TPUSpec = TPU_V5E) -> Dict:
-    """Assemble the §Roofline row from a dry-run artifact dict."""
+def roofline_report(workload: Workload, artifact: Dict,
+                    chip: TPUSpec = TPU_V5E) -> Dict:
+    """Assemble the §Roofline row from a dry-run artifact dict.
+
+    ``workload`` is the cell's Workload IR (usually the analytic LM
+    front-end profile); its ``model_flops()`` — the 6ND/2ND useful-work
+    hint — is the numerator of the useful-flops and roofline-fraction
+    columns.
+    """
     chips = artifact["devices"]
     flops = artifact["cost"]["flops"]                 # per-chip
     byts = artifact["cost"]["bytes_accessed"]         # per-chip
     coll = artifact["collectives"]["total"]           # per-chip
     terms = roofline_terms(flops, byts, coll, chip)
     dom = dominant_term(terms)
-    mflops = model_flops(cfg, shape)                  # global useful
-    if shape.kind == "train":
-        pass                                          # 6ND already
+    mflops = workload.model_flops()                   # global useful
     hlo_global = flops * chips
     useful = mflops / hlo_global if hlo_global else 0.0
     t_bound = max(terms.values())

@@ -1,0 +1,86 @@
+"""Workload ingestion — the paper's step 1, behind one IR.
+
+``repro.core.workload`` is a package now: :mod:`ir` defines the
+:class:`Workload`/:class:`Op` vocabulary every model, DSE engine,
+simulator and benchmark consumes; :mod:`frontends` hosts the pluggable
+ingestion paths (CNN zoo, analytic LM profile, JAX tracer); and
+:mod:`registry` resolves workload names for the
+``python -m repro.workloads`` CLI.
+
+Everything the old single-module API exported is re-exported here, so
+``from repro.core.workload import ConvLayer, lm_block_ops, ...`` keeps
+working.
+"""
+from repro.core.workload.ir import (
+    ACTIVATION_FLOP_KINDS,
+    ConvLayer,
+    EmptyWorkloadError,
+    OP_KINDS,
+    Op,
+    OpInfo,
+    WEIGHT_FLOP_KINDS,
+    Workload,
+    WorkloadError,
+    as_conv_layers,
+    ctc_stats,
+    total_ops,
+)
+from repro.core.workload.frontends.cnn import (
+    CNN_ZOO,
+    INPUT_SIZE_CASES,
+    ZOO_DEFAULT_INPUT,
+    alexnet,
+    cnn_workload,
+    conv_case_workload,
+    resnet18,
+    resnet34,
+    vgg16_conv,
+    workload_from_conv_layers,
+    yolo_tiny,
+    zfnet,
+)
+from repro.core.workload.frontends.lm import (
+    lm_block_ops,
+    lm_workload,
+    model_flops,
+    profile_arch,
+)
+from repro.core.workload.registry import (
+    get_workload,
+    list_workloads,
+    register_workload,
+    resolve_arch,
+    resolve_shape,
+)
+
+
+def trace_workload(*args, **kwargs):
+    """Lazy wrapper for the JAX-trace front-end (imports jax on use)."""
+    from repro.core.workload.frontends.jax_trace import trace_workload as t
+    return t(*args, **kwargs)
+
+
+def diff_workloads(analytic, traced):
+    """Lazy wrapper for the traced-vs-analytic cross-check."""
+    from repro.core.workload.frontends.jax_trace import diff_workloads as d
+    return d(analytic, traced)
+
+
+__all__ = [
+    # IR
+    "Op", "OpInfo", "Workload", "ConvLayer",
+    "WorkloadError", "EmptyWorkloadError",
+    "OP_KINDS", "WEIGHT_FLOP_KINDS", "ACTIVATION_FLOP_KINDS",
+    "total_ops", "ctc_stats", "as_conv_layers",
+    # CNN front-end
+    "CNN_ZOO", "ZOO_DEFAULT_INPUT", "INPUT_SIZE_CASES",
+    "vgg16_conv", "alexnet", "zfnet", "yolo_tiny", "resnet18", "resnet34",
+    "cnn_workload", "conv_case_workload", "workload_from_conv_layers",
+    # LM front-end
+    "lm_block_ops", "profile_arch", "model_flops", "lm_workload",
+    # JAX-trace front-end
+    "trace_workload", "diff_workloads",
+    # registry
+    "get_workload", "list_workloads", "register_workload",
+    "resolve_arch", "resolve_shape",
+]

@@ -1,0 +1,13 @@
+"""Pluggable workload front-ends.
+
+* :mod:`cnn` — the FPGA-domain layer zoo (ConvLayer geometry kept as
+  each op's ``spatial`` payload);
+* :mod:`lm` — the analytic ModelConfig x ShapeConfig profile;
+* :mod:`jax_trace` — the real-model jaxpr tracer (imported lazily; it
+  pulls in jax and ``repro.models``).
+
+A new front-end is just a module with a ``*_workload(...) -> Workload``
+builder, registered via
+:func:`repro.core.workload.registry.register_workload`.
+"""
+from repro.core.workload.frontends import cnn, lm  # noqa: F401

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.configs import shape_skip_reason
 from repro.core.roofline import collective_bytes_from_hlo, roofline_report
+from repro.core.workload import lm_workload
 from repro.dist.sharding import (
     DECODE_RECIPE,
     IS_RECIPE,
@@ -142,7 +143,10 @@ def abstract_train_state(cfg: ModelConfig, recipe: Recipe, mesh):
 
 def abstract_decode_cache(cfg: ModelConfig, shape: ShapeConfig,
                           recipe: Recipe, mesh):
-    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    # decode against a cache longer than seq_len (ShapeConfig.kv_len) —
+    # must match what the analytic LM front-end profiles for the cell
+    max_len = getattr(shape, "kv_len", None) or shape.seq_len
+    cache = abstract_cache(cfg, shape.global_batch, max_len)
     caxes = {k: CACHE_AXES[k] for k in cache}
     return _shard_tree(cache, caxes, recipe, mesh)
 
@@ -156,7 +160,8 @@ def build_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh,
     """Lower one cell's step function. Used for the production compile
     (scanned layers) and the cost probes (reduced depth, unrolled)."""
     B = batch_override or shape.global_batch
-    eff_shape = ShapeConfig(shape.name, shape.seq_len, B, shape.kind)
+    eff_shape = ShapeConfig(shape.name, shape.seq_len, B, shape.kind,
+                            kv_len=getattr(shape, "kv_len", None))
     with use_mesh(mesh):
         if shape.kind == "train":
             tc = TrainConfig(opt=AdamWConfig(), microbatches=m)
@@ -348,5 +353,14 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
                              if k != "collectives"},
         "collectives": coll,
     }
-    art["roofline"] = roofline_report(cfg, shape, art)
+    # analytic twin of this cell in the Workload IR: drives the roofline
+    # useful-work columns and gives consumers the traced-vs-analytic hook
+    wl = lm_workload(cfg, shape)
+    art["workload"] = {
+        "name": wl.name, "frontend": wl.frontend, "ops": len(wl),
+        "analytic_flops": wl.total_ops(),
+        "model_flops": wl.model_flops(),
+        "weight_bytes": wl.total_weight_bytes(),
+    }
+    art["roofline"] = roofline_report(wl, art)
     return art

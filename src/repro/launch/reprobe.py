@@ -14,6 +14,7 @@ import time
 
 from repro.artifacts import dryrun_dir
 from repro.core.roofline import roofline_report
+from repro.core.workload import lm_workload
 from repro.launch.lowering import cost_probe, default_recipe
 from repro.launch.presets import PRESETS, Preset, get_preset
 from repro.models.model import ModelRuntime
@@ -49,7 +50,7 @@ def reprobe(preset: Preset, out_dir: str = None):
                        ("flops", "bytes_accessed", "transcendentals",
                         "probe_depths")}
         art["collectives"] = probe["collectives"]
-        art["roofline"] = roofline_report(cfg, shape, art)
+        art["roofline"] = roofline_report(lm_workload(cfg, shape), art)
         with open(path, "w") as f:
             json.dump(art, f, indent=1)
         print(f"[OK] {name} ({time.time()-t0:.0f}s) "

@@ -18,6 +18,7 @@ from typing import List, Sequence
 from repro.core.analytical.generic import GenericDesign, generic_layer_latency
 from repro.core.analytical.pipeline import PipelineDesign, StageConfig
 from repro.core.hardware import FPGASpec
+from repro.core.workload import Workload
 
 
 class DramPort:
@@ -243,3 +244,34 @@ def simulate_generic(
         gops=ops / interval / 1e9,
         dram_utilization=served / (spec.bw_bytes * t),
     )
+
+
+def simulate(design, spec: FPGASpec, **kw) -> SimResult:
+    """Dispatch on the design type (pipeline vs generic section)."""
+    if isinstance(design, PipelineDesign):
+        return simulate_pipeline(design, spec, **kw)
+    if isinstance(design, GenericDesign):
+        return simulate_generic(design, spec, **kw)
+    raise TypeError(f"cannot simulate {type(design).__name__}; expected "
+                    f"PipelineDesign or GenericDesign")
+
+
+def simulate_workload(workload, spec: FPGASpec, paradigm: int = 1,
+                      batch: int = 1, wbits: int = 16, abits: int = 16,
+                      ) -> SimResult:
+    """Workload-IR entry point: run the paradigm's level-2 optimizer on
+    a CNN-frontend :class:`Workload`, then execute the resulting
+    schedule event-accurately. The independent 'board' measurement for
+    any registered workload in one call."""
+    from repro.core.analytical.generic import generic_dse
+    from repro.core.analytical.pipeline import pipeline_performance
+
+    wl = Workload.coerce(workload)
+    if paradigm == 1:
+        design = pipeline_performance(wl, spec, batch, wbits, abits)
+        return simulate_pipeline(design, spec)
+    if paradigm == 2:
+        design = generic_dse(wl, spec, batch, wbits, abits)
+        return simulate_generic(design, spec, batch)
+    raise ValueError(f"paradigm must be 1|2 (pipeline|generic), got "
+                     f"{paradigm}")

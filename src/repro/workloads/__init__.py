@@ -1,0 +1,28 @@
+"""User-facing workload surface: ``python -m repro.workloads ...``.
+
+Thin re-export of the Workload IR + front-ends + registry
+(:mod:`repro.core.workload`) plus the CLI in :mod:`__main__`:
+
+* ``list`` — every registered workload and the parametric families;
+* ``show <spec>`` — per-op table + totals for one workload;
+* ``diff --model <arch> --shape <shape>`` — jaxpr-traced vs analytic
+  cross-check (the standing validation of both front-ends).
+"""
+from repro.core.workload import (  # noqa: F401
+    ConvLayer,
+    EmptyWorkloadError,
+    Op,
+    OpInfo,
+    Workload,
+    WorkloadError,
+    cnn_workload,
+    conv_case_workload,
+    diff_workloads,
+    get_workload,
+    list_workloads,
+    lm_workload,
+    register_workload,
+    resolve_arch,
+    resolve_shape,
+    trace_workload,
+)
