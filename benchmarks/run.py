@@ -36,6 +36,10 @@ def build_benches(quick: bool = False) -> list:
         # they raise with the generation command when none exist
         ("roofline", "roofline_table", "run_all_meshes", (), {}),
         ("tpu_model", "tpu_model_error", "run", (), {}),
+        # kernel-calibration consumer: needs artifacts/kernels/
+        # calibration.json (repro.kernels.tune); raises with the
+        # generation command when none exists
+        ("kernel_model_error", "kernel_model_error", "run", (), {}),
     ]
 
 

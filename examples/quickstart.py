@@ -4,7 +4,10 @@
    consumes) and benchmark the two established accelerator paradigms,
 2. explore the paper's hybrid paradigm with the two-level DSE,
 3. do the same for a TPU pod: profile an assigned LM architecture,
-   run the TPU DSE over sharding plans, print the predicted roofline.
+   run the TPU DSE over sharding plans, print the predicted roofline,
+4. close the analytic<->measured loop: microbenchmark the live kernel
+   dispatch ops and evaluate a workload from the measured timings
+   (the Fig. 4/5 validation methodology at kernel scale).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -42,3 +45,18 @@ print(f"predicted per-chip terms: compute {a.compute_s:.2f}s, "
       f"memory {a.memory_s:.2f}s, collectives {a.collective_s:.2f}s "
       f"-> bottleneck: {a.dominant}")
 print(f"predicted roofline fraction: {t.best_fitness:.3f}")
+
+print("\n== step 4: measured kernels close the loop ==")
+from repro.core.analytical import DesignPoint, MeasuredModel
+from repro.core.workload import lm_workload
+from repro.kernels.tune import TUNE_PRESETS, run_tuning
+
+pset = TUNE_PRESETS["ci"]
+calib = run_tuning(pset, cells=[("minicpm-2b", "prefill_32k")], reps=1)
+wl_smoke = lm_workload(pset.arch("minicpm-2b"), pset.shape("prefill_32k"))
+m = MeasuredModel(wl_smoke, calib).evaluate(DesignPoint.make())
+src = m.resources
+print(f"{wl_smoke.name} from measured kernel timings: "
+      f"{m.latency_s * 1e3:.2f} ms/step ({m.gops:.1f} GOP/s; "
+      f"{src['measured_ops']:.0f} ops measured, "
+      f"{src['interpolated_ops']:.0f} roofline-interpolated)")

@@ -1,8 +1,16 @@
 """Serve a small model with batched requests: prefill + continuous-
-batching greedy decode, mixed prompt lengths, slot reuse.
+batching greedy decode, mixed prompt lengths, slot reuse — under a
+selectable KernelPolicy.
 
     PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --use-kernels
+
+``--use-kernels`` routes every hot spot (prefill attention, split-KV
+decode attention, rmsnorm) through the Pallas kernels (interpret mode
+off-TPU) via the dispatch layer; the emitted tokens are identical to
+the XLA policy — the live demonstration of the kernel dispatch seam.
 """
+import argparse
 import time
 
 import numpy as np
@@ -14,8 +22,16 @@ from repro.models import init_params
 from repro.models.model import ModelRuntime
 from repro.serve import Request, ServeEngine
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--use-kernels", action="store_true",
+                help="serve through the Pallas kernel policy "
+                     "(interpret mode off-TPU)")
+args = ap.parse_args()
+
 cfg = smoke_config(ARCHS["starcoder2-3b"])
-rt = ModelRuntime(dtype="float32", remat="none", attn_chunk=64)
+rt = ModelRuntime(dtype="float32", remat="none", attn_chunk=64,
+                  use_kernels=args.use_kernels)
+print(f"kernel policy: {rt.kernel_policy().describe()}")
 params = init_params(jax.random.PRNGKey(0), cfg)
 eng = ServeEngine(params, cfg, rt, n_slots=4, max_len=128)
 

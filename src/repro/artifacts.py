@@ -11,6 +11,7 @@ under installed-package layouts where ``repro`` lives in
     <root>/dryrun/pp/...                                  pipeline-parallel runs
     <root>/bench/<name>.json                              benchmark outputs
     <root>/perf/...                                       §Perf hillclimb variants
+    <root>/kernels/calibration.json                       kernel autotuner output
 
 ``<root>`` is ``$REPRO_ARTIFACT_DIR`` when set, else ``./artifacts``
 relative to the current working directory (the repo checkout root in
@@ -43,6 +44,17 @@ def bench_dir() -> str:
 
 def perf_dir() -> str:
     return os.path.join(artifact_root(), "perf")
+
+
+def kernels_dir() -> str:
+    """Kernel-autotuner artifacts (``repro.kernels.tune``)."""
+    return os.path.join(artifact_root(), "kernels")
+
+
+def calibration_path() -> str:
+    """The microbenchmark calibration table the measured accelerator
+    model (``repro.core.analytical.measured``) evaluates workloads from."""
+    return os.path.join(kernels_dir(), "calibration.json")
 
 
 def pp_dir() -> str:

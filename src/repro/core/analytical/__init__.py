@@ -23,6 +23,11 @@ from repro.core.analytical.hybrid import (
     hybrid_performance,
 )
 from repro.core.analytical.tpu_model import TPUModel
+from repro.core.analytical.measured import (
+    CalibrationMissing,
+    MeasuredModel,
+    load_calibration,
+)
 
 __all__ = [
     "AcceleratorModel",
@@ -42,4 +47,7 @@ __all__ = [
     "HybridModel",
     "hybrid_performance",
     "TPUModel",
+    "CalibrationMissing",
+    "MeasuredModel",
+    "load_calibration",
 ]

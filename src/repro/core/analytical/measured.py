@@ -1,0 +1,199 @@
+"""Measured-latency accelerator model: evaluate Workloads from kernel
+microbenchmark timings instead of formulas.
+
+The paper's methodology validates analytical predictions against real
+measurements (Figs. 4/5, 1.15%/2.17% error). This module is the
+measurement side of that loop for the kernel subsystem:
+:class:`MeasuredModel` implements the shared
+:class:`~repro.core.analytical.interface.AcceleratorModel` protocol, but
+where ``PipelineModel``/``TPUModel`` *derive* per-op latency from
+resource equations, it *looks it up* in the calibration table the
+autotuner (``repro.kernels.tune``) measured — so the DSE / Pareto
+machinery can score a workload against evidence, and
+``benchmarks/kernel_model_error.py`` can report exactly how far the
+formulas drift from the measurements.
+
+Shapes the tuner did not measure are roofline-interpolated: the
+calibration entries of the op's kind yield achieved FLOP/s and byte/s
+rates, and the op's latency is the roofline max of (flops / rate,
+bytes / rate). Ops within a small factor of a measured entry scale that
+entry's timing instead.
+
+No jax at module scope (like every analytical model) — this is pure
+table arithmetic.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import statistics
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+from repro.artifacts import calibration_path
+from repro.core.analytical.interface import EvalResult
+from repro.core.hardware import TPU_V5E, TPUSpec
+from repro.core.workload import Op, Workload
+
+#: Fields every calibration entry must carry — the schema contract the
+#: tuner writes and this module / the tests / the benchmark validate.
+ENTRY_FIELDS = ("op", "arch", "shape", "kind", "source_op", "case",
+                "flops", "bytes", "impls", "winner", "best_s")
+
+#: calibration entry op name -> Workload IR op kind it measures
+CALIB_OP_KIND = {
+    "prefill_attention": "attention",
+    "decode_attention": "attention",
+    "ssd_scan": "scan",
+    "moe_gemm": "matmul",
+    "rmsnorm": "norm",
+}
+
+#: An op whose FLOPs are within this factor of a measured entry reuses
+#: that entry's timing (linearly scaled) instead of the roofline rates.
+MEASURED_MATCH_FACTOR = 4.0
+
+GENERATE_HINT = (
+    "no kernel calibration found at {path} — run the autotuner first:\n"
+    "    PYTHONPATH=src python -m repro.kernels.tune --preset ci\n"
+    "(seconds on a CPU host; use --preset full on a TPU host for "
+    "meaningful timings. See README §Kernel dispatch & autotuning.)")
+
+
+class CalibrationMissing(RuntimeError):
+    """Raised instead of silently evaluating from an empty table."""
+
+
+def load_calibration(path: Optional[str] = None) -> Dict[str, Any]:
+    """Load + structurally validate a ``calibration.json`` payload."""
+    path = path or calibration_path()
+    if not os.path.exists(path):
+        raise CalibrationMissing(GENERATE_HINT.format(path=path))
+    with open(path) as f:
+        payload = json.load(f)
+    entries = payload.get("entries")
+    if not entries:
+        raise CalibrationMissing(
+            f"calibration at {path} has no entries — regenerate:\n"
+            f"    PYTHONPATH=src python -m repro.kernels.tune --preset "
+            f"{payload.get('preset', 'ci')}")
+    for i, e in enumerate(entries):
+        missing = [k for k in ENTRY_FIELDS if k not in e]
+        if missing:
+            raise CalibrationMissing(
+                f"calibration entry {i} at {path} is missing fields "
+                f"{missing} — schema drift; regenerate with the current "
+                f"tuner")
+    return payload
+
+
+class MeasuredModel:
+    """``AcceleratorModel`` whose evaluate() reads measured timings.
+
+    ``workload`` is anything :meth:`Workload.coerce` accepts (a
+    registry spec resolved by the caller, a traced model, a hand-built
+    op list); ``calibration`` is a loaded payload, a path, or None for
+    the default artifact location.
+
+    ``evaluate`` accepts any :class:`DesignPoint` for protocol
+    compatibility but ignores its knobs: measurements are facts about
+    one configuration, not a function of design variables. The value of
+    this model inside the DSE is as the *anchor* the analytical models
+    are compared against (``benchmarks/kernel_model_error.py``), exactly
+    how the paper uses board measurements.
+    """
+
+    name = "measured"
+
+    def __init__(self, workload: Union[Workload, Any],
+                 calibration: Union[None, str, Dict[str, Any]] = None,
+                 chip: TPUSpec = TPU_V5E):
+        self.workload = Workload.coerce(workload)
+        if isinstance(calibration, dict):
+            self.calibration = calibration
+        else:
+            self.calibration = load_calibration(calibration)
+        self.chip = chip
+        self._by_kind: Dict[str, List[Dict[str, float]]] = {}
+        for e in self.calibration["entries"]:
+            kind = CALIB_OP_KIND.get(e["op"])
+            if kind is None or e["best_s"] <= 0:
+                continue
+            self._by_kind.setdefault(kind, []).append({
+                "op": e["op"], "arch": e["arch"],
+                "flops": float(e["flops"]), "bytes": float(e["bytes"]),
+                "best_s": float(e["best_s"]),
+            })
+        if not self._by_kind:
+            raise CalibrationMissing(
+                "calibration has no usable entries (all zero-time or "
+                "unknown ops)")
+
+    # -- rates ----------------------------------------------------------------
+    def _entries_for(self, kind: str) -> List[Dict[str, float]]:
+        if kind in self._by_kind:
+            return self._by_kind[kind]
+        # unmeasured kind (embed / router / conv / plain matmul on a
+        # model with no MoE): fall back to every measured entry
+        return [e for es in self._by_kind.values() for e in es]
+
+    def achieved_rates(self, kind: str) -> Tuple[float, float]:
+        """(FLOP/s, bytes/s) the measured kernels of ``kind`` achieved
+        (medians across entries; the roofline-interpolation rates)."""
+        es = self._entries_for(kind)
+        flops_rates = [e["flops"] / e["best_s"] for e in es
+                       if e["flops"] > 0]
+        byte_rates = [e["bytes"] / e["best_s"] for e in es
+                      if e["bytes"] > 0]
+        F = statistics.median(flops_rates) if flops_rates else float("inf")
+        B = statistics.median(byte_rates) if byte_rates else float("inf")
+        return F, B
+
+    # -- per-op latency -------------------------------------------------------
+    def op_latency(self, op: Op) -> Tuple[float, str]:
+        """Latency of one IR op: ``(seconds, 'measured'|'roofline')``.
+
+        'measured': a calibration entry of the same kind sits within
+        :data:`MEASURED_MATCH_FACTOR` in FLOPs — its timing is scaled
+        linearly. 'roofline': no close entry; the kind's achieved rates
+        bound the latency (max of compute and memory terms).
+        """
+        es = self._by_kind.get(op.kind, [])
+        if op.flops > 0:
+            close = [(abs(math.log(op.flops / e["flops"])), e)
+                     for e in es if e["flops"] > 0]
+            if close:
+                dist, e = min(close, key=lambda t: t[0])
+                if dist <= math.log(MEASURED_MATCH_FACTOR):
+                    return e["best_s"] * op.flops / e["flops"], "measured"
+        F, B = self.achieved_rates(op.kind)
+        compute_s = op.flops / F if op.flops > 0 else 0.0
+        memory_s = op.total_bytes / B if op.total_bytes > 0 else 0.0
+        return max(compute_s, memory_s), "roofline"
+
+    # -- the AcceleratorModel protocol ---------------------------------------
+    def evaluate(self, point=None) -> EvalResult:
+        per_op = []
+        latency = 0.0
+        n_measured = n_interp = 0
+        for op in self.workload.ops:
+            s, how = self.op_latency(op)
+            latency += s
+            n_measured += how == "measured"
+            n_interp += how == "roofline"
+            per_op.append({"name": op.name, "kind": op.kind,
+                           "latency_s": s, "source": how})
+        if latency <= 0:
+            return EvalResult.infeasible(
+                f"workload {self.workload.name!r} evaluated to zero "
+                f"latency — empty or zero-cost ops", detail=per_op)
+        model_flops = self.workload.model_flops()
+        return EvalResult(
+            gops=model_flops / latency / 1e9,
+            throughput=1.0 / latency,
+            latency_s=latency,
+            efficiency=(model_flops / latency) / self.chip.peak_flops(),
+            feasible=True,
+            resources={"measured_ops": float(n_measured),
+                       "interpolated_ops": float(n_interp)},
+            detail=per_op)

@@ -2,7 +2,14 @@
 
 Each kernel file carries the pallas_call + BlockSpec tiling; ``ops.py``
 exposes jit'd wrappers (interpret mode off-TPU); ``ref.py`` holds the
-pure-jnp oracles the tests assert against.
+pure-jnp oracles the tests assert against; ``dispatch.py`` is the live
+seam — every kernel is a registered op with pluggable ``xla``/``pallas``
+implementations that the models select per-op through a
+:class:`~repro.kernels.dispatch.KernelPolicy` (``ModelRuntime
+(use_kernels=True)`` / ``ModelRuntime(kernels=policy)``); ``tune.py``
+microbenchmarks the dispatch table and persists winners + timings to
+``artifacts/kernels/calibration.json`` for the measured accelerator
+model (``repro.core.analytical.measured``).
 
 | kernel              | hot spot                      | paper linkage |
 |---------------------|-------------------------------|---------------|

@@ -2,8 +2,11 @@
 
 ``interpret`` defaults to True off-TPU (kernel bodies execute in Python
 via the Pallas interpreter — correctness path); on real TPU backends the
-compiled kernels run natively. ``ModelRuntime.use_kernels`` selects
-these over the pure-XLA model paths.
+compiled kernels run natively. These wrappers are the registered
+``pallas`` implementations in ``repro.kernels.dispatch`` — a
+:class:`~repro.kernels.dispatch.KernelPolicy` (``ModelRuntime.
+use_kernels`` / ``ModelRuntime.kernels``) selects them over the
+pure-XLA model paths per op.
 """
 from __future__ import annotations
 

@@ -6,10 +6,15 @@ Two execution paths:
   (``lax.scan``). This is the XLA path used on CPU and in the dry-run:
   peak memory is O(S * chunk) instead of O(S^2), which is what lets the
   prefill_32k cells compile with sane per-device byte counts. It is the
-  same tiling the Pallas ``flash_attention`` kernel implements in VMEM
-  (selected via ``ModelRuntime.use_kernels`` on real TPUs).
+  same tiling the Pallas ``flash_attention`` kernel implements in VMEM.
 * ``decode_attention`` — one query token against a (possibly circular
   sliding-window) KV cache.
+
+Both are the registered ``xla`` implementations of the
+``prefill_attention`` / ``decode_attention`` dispatch ops
+(``repro.kernels.dispatch``); the models call through the dispatch
+layer, and a :class:`~repro.kernels.dispatch.KernelPolicy` (e.g. from
+``ModelRuntime.use_kernels``) flips them to the Pallas kernels.
 """
 from __future__ import annotations
 

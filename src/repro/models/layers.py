@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.dispatch import RMSNORM_EPS, KernelPolicy, dispatch
 
 
 # ===========================================================================
@@ -83,12 +84,16 @@ def abstract_from_defs(defs: DefTree):
 # ===========================================================================
 # Norms (compute in f32, cast back)
 # ===========================================================================
-def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
-    dt = x.dtype
-    xf = x.astype(jnp.float32)
-    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
-    y = xf * jax.lax.rsqrt(var + eps)
-    return (y * scale.astype(jnp.float32)).astype(dt)
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = RMSNORM_EPS,
+            policy: Optional[KernelPolicy] = None) -> jax.Array:
+    """RMSNorm, routed through the kernel dispatch layer.
+
+    ``policy=None`` (or an xla policy) runs the pure-jnp path; a pallas
+    policy runs the fused VPU kernel. ``eps`` threads through dispatch
+    into whichever implementation runs — the single source of truth for
+    the epsilon both paths previously hardcoded independently.
+    """
+    return dispatch("rmsnorm", policy, x, scale, eps=eps)
 
 
 def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
@@ -102,10 +107,11 @@ def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
             + bias.astype(jnp.float32)).astype(dt)
 
 
-def norm(x: jax.Array, p: Dict[str, jax.Array], kind: str) -> jax.Array:
+def norm(x: jax.Array, p: Dict[str, jax.Array], kind: str,
+         policy: Optional[KernelPolicy] = None) -> jax.Array:
     if kind == "layernorm":
         return layernorm(x, p["scale"], p["bias"])
-    return rmsnorm(x, p["scale"])
+    return rmsnorm(x, p["scale"], policy=policy)
 
 
 def norm_defs(d_model: int, kind: str) -> Dict[str, ParamDef]:

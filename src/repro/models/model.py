@@ -23,10 +23,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import constrain
+from repro.kernels.dispatch import KernelPolicy, dispatch
 from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
-from repro.models.attention import chunked_attention, decode_attention
 from repro.models.layers import ParamDef, norm, norm_defs, swiglu
 
 
@@ -37,10 +37,21 @@ class ModelRuntime:
     dtype: str = "bfloat16"
     remat: str = "dots"          # none | dots | full
     attn_chunk: int = 512
-    use_kernels: bool = False    # select Pallas kernels on real TPUs
+    use_kernels: bool = False    # all-Pallas shorthand (see kernel_policy)
     moe_dropless: bool = False   # capacity = T (prefill consistency/serving)
     moe_chunk: int = 0           # GShard token-group size (0 = one group)
     unroll_layers: bool = False  # fully unroll layer scans (cost probes)
+    # Per-op kernel selection. None defers to ``use_kernels``; an explicit
+    # policy (e.g. tuned per-op winners from kernels/tune.py calibration)
+    # overrides the bool entirely.
+    kernels: Optional[KernelPolicy] = None
+
+    def kernel_policy(self) -> KernelPolicy:
+        """The resolved per-op implementation policy every model path
+        dispatches through (``use_kernels`` maps onto all-pallas)."""
+        if self.kernels is not None:
+            return self.kernels
+        return KernelPolicy.from_flag(self.use_kernels)
 
 
 # ===========================================================================
@@ -133,15 +144,15 @@ def _mlp(p: Dict[str, jax.Array], h: jax.Array, cfg: ModelConfig) -> jax.Array:
     return z @ p["wo2"].astype(h.dtype)
 
 
-def _attn_proj(p, h, cfg):
+def _attn_proj(p, h, cfg, policy=None):
     B, S, _ = h.shape
     hd = cfg.head_dim
     q = (h @ p["wq"].astype(h.dtype)).reshape(B, S, cfg.n_heads, hd)
     k = (h @ p["wk"].astype(h.dtype)).reshape(B, S, cfg.n_kv_heads, hd)
     v = (h @ p["wv"].astype(h.dtype)).reshape(B, S, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
-        q = L.rmsnorm(q, p["q_norm"])
-        k = L.rmsnorm(k, p["k_norm"])
+        q = L.rmsnorm(q, p["q_norm"], policy=policy)
+        k = L.rmsnorm(k, p["k_norm"], policy=policy)
     return q, k, v
 
 
@@ -152,22 +163,23 @@ def attn_block(p: Dict[str, Any], x: jax.Array, positions: jax.Array,
 
     k/v are post-RoPE — exactly what the decode cache stores; callers
     that don't prefill simply drop them (XLA dead-code-eliminates)."""
-    h = norm(x, p["ln1"], cfg.norm)
-    q, k, v = _attn_proj(p, h, cfg)
+    pol = rt.kernel_policy()
+    h = norm(x, p["ln1"], cfg.norm, policy=pol)
+    q, k, v = _attn_proj(p, h, cfg, policy=pol)
     q, k = L.apply_rope(q, k, positions, cfg)
     q = constrain(q, ("batch", "seq", "heads", "head_dim"))
     k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
-    o = chunked_attention(q, k, v, causal=cfg.causal,
-                          window=cfg.sliding_window, chunk=rt.attn_chunk)
+    o = dispatch("prefill_attention", pol, q, k, v, causal=cfg.causal,
+                 window=cfg.sliding_window, chunk=rt.attn_chunk)
     o = o.reshape(x.shape[0], x.shape[1], -1)
     x = x + o @ p["wo"].astype(x.dtype)
     x = constrain(x, ("batch", "seq", "embed"))
 
-    h2 = norm(x, p["ln2"], cfg.norm)
+    h2 = norm(x, p["ln2"], cfg.norm, policy=pol)
     aux = jnp.zeros((), jnp.float32)
     if cfg.moe is not None:
         y, aux = MOE.moe_ffn(p["moe"], h2, cfg, dropless=rt.moe_dropless,
-                             token_chunk=rt.moe_chunk)
+                             token_chunk=rt.moe_chunk, policy=pol)
     else:
         y = _mlp(p, h2, cfg)
     x = x + y
@@ -175,10 +187,12 @@ def attn_block(p: Dict[str, Any], x: jax.Array, positions: jax.Array,
 
 
 def mamba_block(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig,
+                rt: ModelRuntime,
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Returns (x, {'conv','ssm'} final states for prefill handoff)."""
-    h = norm(x, p["ln"], cfg.norm)
-    y, state = SSM.ssm_block(p["ssm"], h, cfg)
+    pol = rt.kernel_policy()
+    h = norm(x, p["ln"], cfg.norm, policy=pol)
+    y, state = SSM.ssm_block(p["ssm"], h, cfg, policy=pol)
     return constrain(x + y, ("batch", "seq", "embed")), state
 
 
@@ -228,7 +242,7 @@ def _scan_blocks(params, cfg: ModelConfig, x, positions, rt: ModelRuntime):
     zero = jnp.zeros((), jnp.float32)
     if fam == "ssm":
         def body_fn(xp, xs):
-            x2, state = mamba_block(xs, xp, cfg)
+            x2, state = mamba_block(xs, xp, cfg, rt)
             return x2, zero, state
 
         body = _maybe_remat(body_fn, rt)
@@ -277,7 +291,7 @@ def _hybrid_scan(params, cfg: ModelConfig, x, positions, rt):
         gparams, gidx = xs
 
         def inner(xc, lp):
-            x2, state = mamba_block(lp, xc, cfg)
+            x2, state = mamba_block(lp, xc, cfg, rt)
             return x2, state
 
         x_, states = jax.lax.scan(inner, x_, gparams,
@@ -310,7 +324,7 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     if positions is None:
         positions = _default_positions(cfg, B, S)
     x, aux, _ = _scan_blocks(params, cfg, x, positions, rt)
-    x = norm(x, params["final_norm"], cfg.norm)
+    x = norm(x, params["final_norm"], cfg.norm, policy=rt.kernel_policy())
     return _unembed(params, cfg, x), aux
 
 
@@ -374,7 +388,8 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
                  "ssm": ssm.astype(jnp.float32),
                  "k": k.astype(dtype), "v": v.astype(dtype)}
 
-    x = norm(x[:, -1:, :], params["final_norm"], cfg.norm)
+    x = norm(x[:, -1:, :], params["final_norm"], cfg.norm,
+             policy=rt.kernel_policy())
     logits = _unembed(params, cfg, x)[:, 0]
     return cache, logits
 
@@ -432,14 +447,16 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
             for k, (s, d) in cache_spec(cfg, batch, max_len, dtype).items()}
 
 
-def _attn_decode_one(p, x, k_cache, v_cache, pos, cfg: ModelConfig):
+def _attn_decode_one(p, x, k_cache, v_cache, pos, cfg: ModelConfig,
+                     rt: ModelRuntime):
     """One-layer attention for one token. x: (B, d); pos: (B,) int32 —
     per-sequence positions (continuous batching)."""
     B = x.shape[0]
     hd = cfg.head_dim
     W = k_cache.shape[1]
-    h = norm(x, p["ln1"], cfg.norm)[:, None, :]          # (B,1,d)
-    q, k, v = _attn_proj(p, h, cfg)
+    pol = rt.kernel_policy()
+    h = norm(x, p["ln1"], cfg.norm, policy=pol)[:, None, :]   # (B,1,d)
+    q, k, v = _attn_proj(p, h, cfg, policy=pol)
     posv = pos[:, None]                                  # (B, 1)
     if cfg.rope == "mrope":
         posv = jnp.broadcast_to(posv[None], (3, B, 1))
@@ -449,12 +466,13 @@ def _attn_decode_one(p, x, k_cache, v_cache, pos, cfg: ModelConfig):
     k_cache = k_cache.at[bidx, slot].set(k[:, 0].astype(k_cache.dtype))
     v_cache = v_cache.at[bidx, slot].set(v[:, 0].astype(v_cache.dtype))
     mask = jnp.arange(W)[None, :] <= pos[:, None]        # (B, W)
-    o = decode_attention(q[:, 0], k_cache, v_cache, mask)
+    o = dispatch("decode_attention", pol, q[:, 0], k_cache, v_cache, mask)
     x = x + o.reshape(B, -1) @ p["wo"].astype(x.dtype)
 
-    h2 = norm(x, p["ln2"], cfg.norm)
+    h2 = norm(x, p["ln2"], cfg.norm, policy=pol)
     if cfg.moe is not None:
-        y, _ = MOE.moe_ffn(p["moe"], h2[:, None, :], cfg, dropless=True)
+        y, _ = MOE.moe_ffn(p["moe"], h2[:, None, :], cfg, dropless=True,
+                           policy=pol)
         y = y[:, 0]
     else:
         y = _mlp(p, h2[:, None, :], cfg)[:, 0]
@@ -468,11 +486,12 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
     pos = cache["pos"]
     x = params["embed"].astype(rt.dtype)[tokens]          # (B, d)
     fam = cfg.family
+    pol = rt.kernel_policy()
 
     if fam in ("dense", "moe", "vlm", "audio"):
         def body(x_, xs):
             lp, kc, vc = xs
-            x2, kc, vc = _attn_decode_one(lp, x_, kc, vc, pos, cfg)
+            x2, kc, vc = _attn_decode_one(lp, x_, kc, vc, pos, cfg, rt)
             return x2, (kc, vc)
 
         x, (k_new, v_new) = jax.lax.scan(
@@ -482,9 +501,9 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
     elif fam == "ssm":
         def body(x_, xs):
             lp, conv, ssm = xs
-            h = norm(x_, lp["ln"], cfg.norm)
+            h = norm(x_, lp["ln"], cfg.norm, policy=pol)
             y, st = SSM.ssm_decode_step(lp["ssm"], h, {
-                "conv": conv, "ssm": ssm}, cfg)
+                "conv": conv, "ssm": ssm}, cfg, policy=pol)
             return x_ + y, (st["conv"], st["ssm"])
 
         x, (conv_new, ssm_new) = jax.lax.scan(
@@ -508,9 +527,9 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
 
             def inner(xc, ys):
                 lp, conv, ssm = ys
-                h = norm(xc, lp["ln"], cfg.norm)
+                h = norm(xc, lp["ln"], cfg.norm, policy=pol)
                 y, st = SSM.ssm_decode_step(lp["ssm"], h, {
-                    "conv": conv, "ssm": ssm}, cfg)
+                    "conv": conv, "ssm": ssm}, cfg, policy=pol)
                 return xc + y, (st["conv"], st["ssm"])
 
             x_, (conv2, ssm2) = jax.lax.scan(inner, x_, (gp, convs, ssms),
@@ -518,7 +537,7 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
             sel = jax.tree.map(
                 lambda a: jax.lax.dynamic_index_in_dim(
                     a, gidx % nshared, 0, keepdims=False), params["shared"])
-            x_, kc, vc = _attn_decode_one(sel, x_, kc, vc, pos, cfg)
+            x_, kc, vc = _attn_decode_one(sel, x_, kc, vc, pos, cfg, rt)
             return x_, (conv2, ssm2, kc, vc)
 
         x, (conv2, ssm2, k_new, v_new) = jax.lax.scan(
@@ -531,6 +550,6 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
             ssm=ssm2.reshape(cache["ssm"].shape),
             k=k_new, v=v_new)
 
-    x = norm(x[:, None, :], params["final_norm"], cfg.norm)
+    x = norm(x[:, None, :], params["final_norm"], cfg.norm, policy=pol)
     logits = _unembed(params, cfg, x)[:, 0]
     return new_cache, logits

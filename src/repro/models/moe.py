@@ -9,13 +9,14 @@ axis. Capacity-dropped tokens fall through the residual connection.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import constrain
+from repro.kernels.dispatch import KernelPolicy, dispatch, resolve_policy
 from repro.models.layers import ParamDef, swiglu
 
 
@@ -48,7 +49,9 @@ def moe_defs(cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> Dict:
 
 def moe_ffn(p: Dict[str, jax.Array], x: jax.Array,
             cfg: ModelConfig, dropless: bool = False,
-            token_chunk: int = 0) -> Tuple[jax.Array, jax.Array]:
+            token_chunk: int = 0,
+            policy: Optional[KernelPolicy] = None,
+            ) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
 
     ``dropless=True`` sets capacity = T (no token ever dropped) — used
@@ -59,9 +62,20 @@ def moe_ffn(p: Dict[str, jax.Array], x: jax.Array,
     C ~ K*T/E, i.e. O(T^2) in one shot — per-group dispatch makes it
     O(T * Tc). This is the §Perf beyond-baseline optimization for the
     MoE cells.
+
+    ``policy`` selects the expert-GEMM implementation: a non-xla
+    ``moe_gemm`` choice switches the *dropless* path from the dense
+    (T, E, C) dispatch einsums to a megablocks-style grouped GEMM over
+    the per-token top-k expert rows (``kernels.moe_gemm``). Capacity-
+    dropping dispatch keeps the einsum structure regardless of policy
+    (the grouped path has no notion of dropping).
     """
     m = cfg.moe
     B, S, d = x.shape
+    pol = resolve_policy(policy)
+    if dropless and pol.impl_for("moe_gemm") != "xla":
+        out, aux = _routed_grouped(p, x.reshape(B * S, d), cfg, pol)
+        return _add_shared(p, x, out.reshape(B, S, d), cfg), aux
     if token_chunk and not dropless and S % token_chunk == 0 \
             and token_chunk < S:
         return _moe_ffn_grouped(p, x, cfg, token_chunk)
@@ -79,13 +93,16 @@ def moe_ffn(p: Dict[str, jax.Array], x: jax.Array,
     return _add_shared(p, x, out, cfg), aux
 
 
-def _routed_core(p: Dict[str, jax.Array], xt: jax.Array, cfg: ModelConfig,
-                 cap: int) -> Tuple[jax.Array, jax.Array]:
-    """Capacity-based dispatch for one token group. xt: (T, d)."""
-    m = cfg.moe
-    T, d = xt.shape
-    E, K = m.n_experts, m.experts_per_token
+def _route(p: Dict[str, jax.Array], xt: jax.Array, cfg: ModelConfig,
+           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k token-choice routing shared by every dispatch structure.
 
+    xt: (T, d) -> (gate_vals (T, K) normalized, idx (T, K) int32,
+    aux_loss scalar). Both the capacity einsum path and the grouped
+    kernel path consume exactly this, so policy choice cannot change
+    routing decisions."""
+    m = cfg.moe
+    E, K = m.n_experts, m.experts_per_token
     logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
     gate_vals, idx = jax.lax.top_k(probs, K)                    # (T, K)
@@ -96,6 +113,48 @@ def _routed_core(p: Dict[str, jax.Array], xt: jax.Array, cfg: ModelConfig,
     one_hot_k = jax.nn.one_hot(idx, E, dtype=jnp.float32)       # (T, K, E)
     ce = jnp.mean(jnp.sum(one_hot_k, axis=1), axis=0) / K       # frac routed
     aux = E * jnp.sum(me * ce) * m.router_aux_loss
+    return gate_vals, idx, aux
+
+
+def _routed_grouped(p: Dict[str, jax.Array], xt: jax.Array,
+                    cfg: ModelConfig, policy: KernelPolicy,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Dropless expert compute as grouped GEMMs over (token, k) rows.
+
+    Each token is replicated K times (one row per chosen expert); the
+    three expert matmuls (wg, wi, wo) run through the ``moe_gemm``
+    dispatch op — the megablocks-style structure the Pallas grouped
+    kernel implements — and the K partial outputs are gate-combined.
+    Mathematically identical to the dropless capacity einsum."""
+    m = cfg.moe
+    T, d = xt.shape
+    E, K = m.n_experts, m.experts_per_token
+
+    gate_vals, idx, aux = _route(p, xt, cfg)
+    x_rep = jnp.repeat(xt, K, axis=0)                          # (T*K, d)
+    eor = idx.reshape(T * K).astype(jnp.int32)                 # row -> expert
+
+    wg = p["wg"].astype(xt.dtype)
+    wi = p["wi"].astype(xt.dtype)
+    wo = p["wo"].astype(xt.dtype)
+    g = dispatch("moe_gemm", policy, x_rep, wg, eor, n_experts=E)
+    u = dispatch("moe_gemm", policy, x_rep, wi, eor, n_experts=E)
+    h = swiglu(g, u)                                           # (T*K, f)
+    y = dispatch("moe_gemm", policy, h, wo, eor, n_experts=E)  # (T*K, d)
+    y = y.reshape(T, K, d) * gate_vals[..., None].astype(y.dtype)
+    out = jnp.sum(y, axis=1)
+    return constrain(out, ("tokens", "embed")), aux
+
+
+def _routed_core(p: Dict[str, jax.Array], xt: jax.Array, cfg: ModelConfig,
+                 cap: int) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based dispatch for one token group. xt: (T, d)."""
+    m = cfg.moe
+    T, d = xt.shape
+    E, K = m.n_experts, m.experts_per_token
+
+    gate_vals, idx, aux = _route(p, xt, cfg)
+    one_hot_k = jax.nn.one_hot(idx, E, dtype=jnp.float32)       # (T, K, E)
 
     # capacity-bounded positions: for each (token, k) slot, its position
     # within the chosen expert's buffer. For small token groups this is

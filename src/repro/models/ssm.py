@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SSMConfig
 from repro.dist.sharding import constrain
+from repro.kernels.dispatch import KernelPolicy, dispatch
 from repro.models.layers import ParamDef, rmsnorm
 
 
@@ -136,11 +137,13 @@ def ssd_chunked(x, dt, A, B, C, chunk: int,
 
 
 def ssm_block(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+              policy: Optional[KernelPolicy] = None,
               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Full Mamba-2 mixer for train/prefill. x: (B, S, d) -> (B, S, d).
 
     Also returns the final recurrent state {'conv','ssm'} so a prefill
-    pass can hand off directly to decode."""
+    pass can hand off directly to decode. ``policy`` selects the SSD
+    scan and norm implementations (XLA chunked scan vs Pallas kernel)."""
     dims = ssm_dims(cfg)
     di, nh, hp, g, N = (dims[k] for k in ("di", "nh", "hp", "g", "N"))
     B_, S, d = x.shape
@@ -159,10 +162,11 @@ def ssm_block(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
                          + p["dt_bias"].astype(jnp.float32))
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
 
-    y, h_final = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm.chunk_size)
+    y, h_final = dispatch("ssd_scan", policy, xs, dt, A, Bm, Cm,
+                          chunk=cfg.ssm.chunk_size)
     y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
     y = y.reshape(B_, S, di)
-    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], policy=policy)
     out = y @ p["out_proj"].astype(y.dtype)
     return out, {"conv": conv_state, "ssm": h_final}
 
@@ -180,6 +184,7 @@ def ssm_cache_shapes(cfg: ModelConfig, batch: int) -> Dict[str, Tuple]:
 
 def ssm_decode_step(p: Dict[str, jax.Array], x: jax.Array,
                     cache: Dict[str, jax.Array], cfg: ModelConfig,
+                    policy: Optional[KernelPolicy] = None,
                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """x: (B, d) one token; cache {'conv','ssm'} -> (y (B, d), new cache)."""
     dims = ssm_dims(cfg)
@@ -208,6 +213,6 @@ def ssm_decode_step(p: Dict[str, jax.Array], x: jax.Array,
     y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(jnp.float32), h)
     y = y.astype(x.dtype) + xs * p["D"].astype(x.dtype)[None, :, None]
     y = y.reshape(B_, di)
-    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], policy=policy)
     out = y @ p["out_proj"].astype(y.dtype)
     return out, {"conv": conv_state, "ssm": h.astype(cache["ssm"].dtype)}

@@ -1,3 +1,21 @@
-from repro.sim.simulator import simulate_pipeline, simulate_generic
+"""Independent 'board' stand-ins for the analytical models.
 
-__all__ = ["simulate_pipeline", "simulate_generic"]
+Two measurement paths validate the formulas:
+
+* the FPGA-domain event simulator here (``simulate`` /
+  ``simulate_workload``) executes schedules event-accurately;
+* the kernel-domain calibration table
+  (``repro.kernels.tune`` -> ``repro.core.analytical.measured``) holds
+  *wall-clock* microbenchmark timings of the live dispatch ops, the
+  analogue for the TPU/kernel side (``benchmarks/kernel_model_error``).
+"""
+from repro.sim.simulator import (
+    SimResult,
+    simulate,
+    simulate_generic,
+    simulate_pipeline,
+    simulate_workload,
+)
+
+__all__ = ["SimResult", "simulate", "simulate_generic",
+           "simulate_pipeline", "simulate_workload"]

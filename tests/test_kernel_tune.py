@@ -1,0 +1,178 @@
+"""Kernel autotuner + measured accelerator model: calibration schema,
+policy aggregation, MeasuredModel evaluation (measured + roofline-
+interpolated paths), and the kernel_model_error benchmark contract.
+
+The mini-sweep fixture runs the real tuner (ci grids, 1 rep) on two
+cells so every downstream consumer is exercised against a genuine
+payload, not a hand-written fixture.
+"""
+import json
+import os
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import ARCHS, smoke_config  # noqa: E402
+from repro.core.analytical.interface import DesignPoint  # noqa: E402
+from repro.core.analytical.measured import (  # noqa: E402
+    CALIB_OP_KIND,
+    CalibrationMissing,
+    ENTRY_FIELDS,
+    MeasuredModel,
+    load_calibration,
+)
+from repro.core.workload import Op, Workload, lm_workload  # noqa: E402
+from repro.kernels.dispatch import (  # noqa: E402
+    KERNEL_OPS,
+    KernelPolicy,
+    implementations,
+)
+from repro.kernels.tune import (  # noqa: E402
+    TUNE_PRESETS,
+    cases_for_cell,
+    run_tuning,
+    write_calibration,
+)
+
+CELLS = (("minicpm-2b", "prefill_32k"), ("qwen2-moe-a2.7b", "prefill_32k"))
+
+
+@pytest.fixture(scope="module")
+def calibration(tmp_path_factory):
+    payload = run_tuning(TUNE_PRESETS["ci"], cells=CELLS, reps=1)
+    path = write_calibration(
+        payload, str(tmp_path_factory.mktemp("kernels") / "calib.json"))
+    return payload, path
+
+
+# ===========================================================================
+# Case derivation from the Workload IR
+# ===========================================================================
+def test_cases_derive_from_workload_ops():
+    pset = TUNE_PRESETS["ci"]
+    # dense prefill: attention + rmsnorm, no scan/moe
+    ops = {c.op for c in cases_for_cell(pset.arch("minicpm-2b"),
+                                        pset.shape("prefill_32k"))}
+    assert ops == {"prefill_attention", "rmsnorm"}
+    # decode: split-KV attention instead of prefill attention
+    ops = {c.op for c in cases_for_cell(pset.arch("minicpm-2b"),
+                                        pset.shape("decode_32k"))}
+    assert ops == {"decode_attention", "rmsnorm"}
+    # ssm: the scan op, and no attention case at all
+    ops = {c.op for c in cases_for_cell(pset.arch("mamba2-1.3b"),
+                                        pset.shape("prefill_32k"))}
+    assert ops == {"ssd_scan", "rmsnorm"}
+    # moe: grouped expert GEMM present
+    cases = cases_for_cell(pset.arch("qwen2-moe-a2.7b"),
+                           pset.shape("prefill_32k"))
+    moe = [c for c in cases if c.op == "moe_gemm"]
+    assert len(moe) == 1 and moe[0].source_op.endswith(".experts")
+    # IR-sourced counts are positive and attributed
+    for c in cases:
+        assert c.flops > 0 and c.bytes > 0
+
+
+# ===========================================================================
+# Calibration payload contract
+# ===========================================================================
+def test_calibration_schema(calibration):
+    payload, path = calibration
+    assert payload["version"] == 1
+    assert payload["preset"] == "ci"
+    assert payload["entries"], "mini-sweep produced no entries"
+    for e in payload["entries"]:
+        for f in ENTRY_FIELDS:
+            assert f in e, f"entry missing {f!r}"
+        assert e["op"] in KERNEL_OPS
+        assert e["best_s"] > 0 and e["flops"] > 0 and e["bytes"] > 0
+        assert e["winner"] in e["impls"]
+        # every registered implementation was swept
+        assert set(e["impls"]) == set(implementations(e["op"]))
+        for impl in e["impls"].values():
+            assert impl["best_s"] > 0 and impl["timings"]
+    # the file round-trips through the loud loader
+    loaded = load_calibration(path)
+    assert loaded["entries"] == json.loads(json.dumps(payload))["entries"]
+
+
+def test_policy_block_maps_onto_kernel_policy(calibration):
+    payload, _ = calibration
+    pol = KernelPolicy.from_calibration(payload)
+    for op in payload["policy"]:
+        assert pol.impl_for(op) == payload["policy"][op]["impl"]
+        # winning tuning params ride along; fixed call-site kwargs
+        # (causal, n_experts, ...) must never appear
+        leaked = {"causal", "window", "n_experts"} \
+            & set(pol.params_for(op))
+        assert not leaked, leaked
+    # ops the sweep never measured stay on xla
+    assert pol.impl_for("ssd_scan") == "xla"
+
+
+def test_load_calibration_loud_on_absence(tmp_path):
+    with pytest.raises(CalibrationMissing, match="repro.kernels.tune"):
+        load_calibration(str(tmp_path / "nope.json"))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"entries": [{"op": "rmsnorm"}]}))
+    with pytest.raises(CalibrationMissing, match="missing fields"):
+        load_calibration(str(bad))
+
+
+# ===========================================================================
+# MeasuredModel
+# ===========================================================================
+def test_measured_model_evaluates_registered_workload(calibration):
+    payload, _ = calibration
+    pset = TUNE_PRESETS["ci"]
+    wl = lm_workload(pset.arch("minicpm-2b"), pset.shape("prefill_32k"))
+    model = MeasuredModel(wl, payload)
+    r = model.evaluate(DesignPoint.make())
+    assert r.feasible and r.latency_s > 0 and r.gops > 0
+    assert r.throughput == pytest.approx(1.0 / r.latency_s)
+    assert r.resources["measured_ops"] + r.resources["interpolated_ops"] \
+        == len(wl.ops)
+    # the calibrated attention shape must hit the measured path
+    sources = {d["name"]: d["source"] for d in r.detail}
+    assert sources["L0.attn"] == "measured"
+
+
+def test_measured_model_roofline_interpolates_unmeasured(calibration):
+    payload, _ = calibration
+    # an attention op 1000x larger than anything measured, plus a kind
+    # the sweep never saw: both must fall back to roofline rates
+    big = Op("huge.attn", "attention", 1e15, 0.0, 1e9, 1e9)
+    alien = Op("embed", "embed", 0.0, 1e9, 1e6, 1e6)
+    wl = Workload(name="synthetic", frontend="adhoc", ops=(big, alien))
+    model = MeasuredModel(wl, payload)
+    s_big, how_big = model.op_latency(big)
+    s_alien, how_alien = model.op_latency(alien)
+    assert how_big == "roofline" and how_alien == "roofline"
+    assert s_big > 0 and s_alien > 0
+    F, B = model.achieved_rates("attention")
+    assert s_big == pytest.approx(max(big.flops / F,
+                                      big.total_bytes / B))
+    r = model.evaluate(DesignPoint.make())
+    assert r.feasible and r.resources["interpolated_ops"] == 2
+
+
+def test_calib_op_kind_covers_every_dispatch_op():
+    assert set(CALIB_OP_KIND) == set(KERNEL_OPS)
+
+
+# ===========================================================================
+# kernel_model_error benchmark contract
+# ===========================================================================
+def test_kernel_model_error_benchmark(calibration, tmp_path, monkeypatch):
+    kme = pytest.importorskip(
+        "benchmarks.kernel_model_error",
+        reason="benchmarks package needs repo-root cwd")
+    _, path = calibration
+    monkeypatch.setenv("REPRO_ARTIFACT_DIR", str(tmp_path))
+    res = kme.run(calibration_file=path)
+    assert res["pass"] and res["ops"] > 0 and res["workloads"] == len(CELLS)
+    assert res["median_err_pct"] == res["median_err_pct"]  # not NaN
+    # emitted artifacts land in the redirected tree
+    assert os.path.exists(tmp_path / "bench" / "kernel_model_error.json")
+    assert os.path.exists(
+        tmp_path / "bench" / "kernel_measured_workloads.json")

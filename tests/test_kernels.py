@@ -140,6 +140,44 @@ def test_grouped_gemm(T, d, f, E, bm, bf):
                                atol=1e-4, rtol=1e-4)
 
 
+@settings(max_examples=20, deadline=None)
+@given(
+    T=st.integers(1, 64),
+    E=st.integers(1, 6),
+    bm=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_sort_by_expert_roundtrip_property(T, E, bm, seed):
+    """Padding + inverse-permutation round-trip invariants:
+
+    * ``x_pad[inv]`` recovers the original rows exactly;
+    * every padded slot NOT addressed by ``inv`` is zero (padding never
+      leaks data into an expert's group);
+    * each row lands in a block whose ``block_expert`` matches its
+      routed expert (the scalar-prefetch contract of the kernel);
+    * destination slots are unique (``inv`` is injective).
+    """
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (T, 3), jnp.float32) + 1.0  # no zero rows
+    eor = jax.random.randint(ks[1], (T,), 0, E)
+    x_pad, block_expert, inv, Tp = sort_by_expert(x, eor, E, bm)
+    x_pad, block_expert, inv = (np.asarray(x_pad),
+                                np.asarray(block_expert), np.asarray(inv))
+    xn, eorn = np.asarray(x), np.asarray(eor)
+
+    assert x_pad.shape[0] == Tp and Tp % bm == 0
+    assert block_expert.shape == (Tp // bm,)
+    # inverse permutation: padded[inv] == original, injectively
+    np.testing.assert_array_equal(x_pad[inv], xn)
+    assert len(np.unique(inv)) == T
+    # untouched slots carry zeros only
+    hit = np.zeros(Tp, bool)
+    hit[inv] = True
+    assert np.all(x_pad[~hit] == 0.0)
+    # each row's destination block streams that row's expert weights
+    np.testing.assert_array_equal(block_expert[inv // bm], eorn)
+
+
 def test_grouped_gemm_empty_group():
     """An expert with zero tokens must not corrupt neighbours."""
     x = jax.random.normal(KEY, (32, 16), jnp.float32)

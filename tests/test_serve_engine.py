@@ -113,6 +113,43 @@ def test_active_slot_count_tracks_occupancy(params):
     assert [r.rid for r in eng.finished] == [0]
 
 
+def _run_engine(cfg, params, rt, prompts, max_new=4, n_slots=2,
+                max_len=64):
+    eng = ServeEngine(params, cfg, rt, n_slots=n_slots, max_len=max_len)
+    for i, prompt in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
+    done = eng.run()
+    return {r.rid: r.out_tokens for r in done}
+
+
+@pytest.mark.parametrize("arch", ["minicpm-2b", "qwen2-moe-a2.7b"])
+def test_serve_engine_pallas_policy_token_parity(arch):
+    """End-to-end serving under the all-pallas KernelPolicy (interpret
+    mode) must emit token-for-token identical output to the XLA policy:
+    prefill, cache splice, continuous-batching decode, the full path."""
+    from repro.configs import ARCHS, smoke_config
+    from repro.models import init_params
+
+    cfg = smoke_config(ARCHS[arch])
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [
+        (np.arange(5) % cfg.vocab_size).astype(np.int32),
+        ((np.arange(3) + 7) % cfg.vocab_size).astype(np.int32),
+        ((np.arange(4) + 11) % cfg.vocab_size).astype(np.int32),
+    ]
+    rt_xla = ModelRuntime(dtype="float32", remat="none", attn_chunk=16,
+                          moe_dropless=True)
+    rt_pallas = ModelRuntime(dtype="float32", remat="none", attn_chunk=16,
+                             moe_dropless=True, use_kernels=True)
+    got_xla = _run_engine(cfg, params, rt_xla, prompts)
+    got_pallas = _run_engine(cfg, params, rt_pallas, prompts)
+    assert got_xla.keys() == got_pallas.keys()
+    for rid in got_xla:
+        assert got_xla[rid] == got_pallas[rid], (
+            f"{arch} rid={rid}: xla {got_xla[rid]} != "
+            f"pallas {got_pallas[rid]}")
+
+
 def test_mid_flight_admission_preserves_neighbors(params):
     """Admitting into a freed slot must not disturb the sequence still
     decoding in the other slot (slot isolation across refill)."""
