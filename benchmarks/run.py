@@ -24,6 +24,7 @@ def build_benches(quick: bool = False) -> list:
     """
     n_cases = 6 if quick else 12
     fig11_kw = {"n_particles": 12, "n_iters": 12} if quick else {}
+    serve_kw = {"n_requests": 8, "max_new": 6} if quick else {}
     return [
         ("fig4", "fig4_pipeline_model_error", "run", (), {}),
         ("fig5", "fig5_generic_model_error", "run", (), {}),
@@ -32,6 +33,9 @@ def build_benches(quick: bool = False) -> list:
         ("fig9", "fig9_resource_split", "run", (n_cases,), {}),
         ("fig10", "fig10_scalability", "run", (), {}),
         ("fig11", "fig11_dse_convergence", "run", (), fig11_kw),
+        # live serving workload: open-loop trace through the ServeEngine,
+        # measured tok/s + latency percentiles vs analytical predictions
+        ("serve_throughput", "serve_throughput", "run", (), serve_kw),
         # dry-run consumers: need artifacts (repro.launch.dryrun);
         # they raise with the generation command when none exist
         ("roofline", "roofline_table", "run_all_meshes", (), {}),

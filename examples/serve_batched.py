@@ -1,14 +1,18 @@
-"""Serve a small model with batched requests: prefill + continuous-
-batching greedy decode, mixed prompt lengths, slot reuse — under a
-selectable KernelPolicy.
+"""Serve a small model with batched requests: scheduled prefill +
+continuous-batching decode, mixed prompt lengths, slot reuse — under a
+selectable KernelPolicy and Sampler.
 
     PYTHONPATH=src python examples/serve_batched.py
     PYTHONPATH=src python examples/serve_batched.py --use-kernels
+    PYTHONPATH=src python examples/serve_batched.py --temperature 0.8
 
 ``--use-kernels`` routes every hot spot (prefill attention, split-KV
 decode attention, rmsnorm) through the Pallas kernels (interpret mode
 off-TPU) via the dispatch layer; the emitted tokens are identical to
 the XLA policy — the live demonstration of the kernel dispatch seam.
+``--temperature`` switches the (per-request seeded, reproducible)
+sampler off greedy. The scheduler buckets the ten distinct prompt
+lengths onto a handful of prefill shapes — watch the compile count.
 """
 import argparse
 import time
@@ -20,20 +24,27 @@ import jax
 from repro.configs import ARCHS, smoke_config
 from repro.models import init_params
 from repro.models.model import ModelRuntime
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, Sampler, ServeEngine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--use-kernels", action="store_true",
                 help="serve through the Pallas kernel policy "
                      "(interpret mode off-TPU)")
+ap.add_argument("--temperature", type=float, default=0.0,
+                help="> 0 switches greedy decoding to seeded "
+                     "temperature sampling")
 args = ap.parse_args()
 
 cfg = smoke_config(ARCHS["starcoder2-3b"])
 rt = ModelRuntime(dtype="float32", remat="none", attn_chunk=64,
                   use_kernels=args.use_kernels)
 print(f"kernel policy: {rt.kernel_policy().describe()}")
+sampler = (Sampler(kind="temperature", temperature=args.temperature,
+                   top_k=32, seed=0)
+           if args.temperature > 0 else Sampler())
 params = init_params(jax.random.PRNGKey(0), cfg)
-eng = ServeEngine(params, cfg, rt, n_slots=4, max_len=128)
+eng = ServeEngine(params, cfg, rt, n_slots=4, max_len=128,
+                  sampler=sampler)
 
 rng = np.random.default_rng(0)
 t0 = time.time()
@@ -46,8 +57,12 @@ for i in range(10):
 done = eng.run()
 dt = time.time() - t0
 toks = sum(len(r.out_tokens) for r in done)
+st = eng.stats
 print(f"served {len(done)} requests / {toks} tokens in {dt:.1f}s "
-      f"with 4 slots (continuous batching)")
+      f"with 4 slots (continuous batching); "
+      f"{st.prefill_compiles} prefill compiles for 10 prompt lengths "
+      f"(bound {eng.scheduler.max_prefill_compiles()}), "
+      f"occupancy {st.occupancy(4):.2f}")
 for r in sorted(done, key=lambda r: r.rid):
     print(f"  rid={r.rid:2d} prompt_len={len(r.prompt):2d} "
-          f"-> {r.out_tokens}")
+          f"finish={r.finish_reason} -> {r.out_tokens}")

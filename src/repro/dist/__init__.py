@@ -12,6 +12,7 @@ from repro.dist.sharding import (
     constrain,
     param_sharding_tree,
     sanitize_spec,
+    shard_tree,
 )
 from repro.dist.fault import StepMonitor, Watchdog, pow2_mesh_shape
 from repro.dist.pipeline import pipeline_apply, stage_split
@@ -19,7 +20,7 @@ from repro.dist.pipeline import pipeline_apply, stage_split
 __all__ = [
     "Recipe", "IS_RECIPE", "WS_RECIPE", "IS_SEQ_RECIPE", "WS_SEQ_RECIPE",
     "DECODE_RECIPE", "RECIPES", "axis_rules", "constrain",
-    "param_sharding_tree", "sanitize_spec",
+    "param_sharding_tree", "sanitize_spec", "shard_tree",
     "StepMonitor", "Watchdog", "pow2_mesh_shape",
     "pipeline_apply", "stage_split",
 ]

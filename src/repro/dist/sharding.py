@@ -224,7 +224,10 @@ def param_sharding_tree(axes_tree, recipe: Recipe, mesh, abstract) -> Any:
 
     ``axes_tree`` mirrors ``abstract`` with per-leaf logical-axis tuples
     (``repro.models.model.axes_tree``); each leaf becomes the recipe's
-    sanitized spec for that parameter's shape.
+    sanitized spec for that parameter's shape. Despite the name this is
+    generic over any (axes, arrays) tree pair — the serving engine
+    reuses it with ``models.model.CACHE_AXES`` to shard the decode
+    cache (see :func:`shard_tree`).
     """
     ab_leaves, treedef = jax.tree.flatten(abstract)
     ax_leaves = jax.tree.flatten(axes_tree, is_leaf=_is_axes_leaf)[0]
@@ -236,3 +239,17 @@ def param_sharding_tree(axes_tree, recipe: Recipe, mesh, abstract) -> Any:
         spec = sanitize_spec(recipe.spec_for(axes), leaf.shape, mesh)
         shardings.append(NamedSharding(mesh, spec))
     return jax.tree.unflatten(treedef, shardings)
+
+
+def shard_tree(tree, axes_tree, recipe: Recipe, mesh) -> Any:
+    """device_put every leaf of ``tree`` with its recipe-derived
+    NamedSharding.
+
+    The one-call placement path the sharded ServeEngine uses for both
+    the parameter tree (``axes_tree = models.model.axes_tree(cfg)``)
+    and the decode cache (``axes_tree = {k: CACHE_AXES[k] ...}``):
+    logical names in, mesh-resident arrays out, infeasible shardings
+    degraded to replication by :func:`sanitize_spec`.
+    """
+    shardings = param_sharding_tree(axes_tree, recipe, mesh, tree)
+    return jax.tree.map(jax.device_put, tree, shardings)

@@ -1,11 +1,17 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
 
-Continuous-batching engine over the selected architecture (reduced
-config on CPU with ``--smoke``): prefill + batched greedy decode.
+Scheduled continuous batching over the selected architecture (reduced
+config on CPU with ``--smoke``): bucketed/chunked prefill, seeded
+sampling (greedy / temperature / top-k), cache-budget admission, and —
+with ``--mesh`` — a sharded slot batch over a device mesh via the
+``repro.dist`` decode recipe. Prints tok/s, per-step latency
+percentiles, slot occupancy, prefill compile count, and any rejected
+requests.
 """
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
 import numpy as np
@@ -13,23 +19,45 @@ import numpy as np
 import jax
 
 from repro.configs import get_arch, smoke_config
+from repro.core.workload.registry import resolve_arch
 from repro.models import init_params
 from repro.models.model import ModelRuntime
-from repro.serve import Request, ServeEngine
+from repro.serve import (Request, Sampler, Scheduler, ServeEngine,
+                         ShardedServeEngine)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated prefill bucket lengths "
+                         "(default: powers of two up to max-len; "
+                         "'exact' disables bucketing)")
+    ap.add_argument("--admit-width", type=int, default=1,
+                    help="fixed batch width of every prefill call")
+    ap.add_argument("--sampler", choices=("greedy", "temperature"),
+                    default="greedy")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--eos", type=int, default=None,
+                    help="token id terminating a request early")
+    ap.add_argument("--overflow", choices=("reject", "truncate", "error"),
+                    default="reject",
+                    help="policy for prompt+max-new > max-len requests")
+    ap.add_argument("--mesh", default=None,
+                    help="DxM device mesh, e.g. 2x4 -> (data, model); "
+                         "shards the engine via the decode recipe")
     args = ap.parse_args()
 
-    cfg = get_arch(args.arch)
+    logging.basicConfig(level=logging.INFO)
+    cfg = get_arch(resolve_arch(args.arch))
     if args.smoke:
         cfg = smoke_config(cfg)
     if cfg.is_encoder_only:
@@ -37,23 +65,61 @@ def main():
     rt = ModelRuntime(dtype="float32", remat="none", attn_chunk=128,
                       moe_dropless=True)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    eng = ServeEngine(params, cfg, rt, n_slots=args.slots,
-                      max_len=args.max_len)
+
+    if args.buckets == "exact":
+        buckets = ()
+    elif args.buckets:
+        buckets = tuple(int(b) for b in args.buckets.split(","))
+    else:
+        buckets = None
+    sched = Scheduler(cfg=cfg, max_len=args.max_len, buckets=buckets,
+                      admit_width=args.admit_width)
+    sampler = Sampler(kind=args.sampler, temperature=args.temperature,
+                      top_k=args.top_k, seed=args.seed)
+    kw = dict(n_slots=args.slots, max_len=args.max_len, sampler=sampler,
+              scheduler=sched, overflow=args.overflow, eos_id=args.eos)
+    if args.mesh:
+        from repro.launch.mesh import make_mesh
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
+        eng = ShardedServeEngine(params, cfg, rt, mesh, **kw)
+    else:
+        eng = ServeEngine(params, cfg, rt, **kw)
 
     rng = np.random.default_rng(args.seed)
-    t0 = time.time()
     for i in range(args.requests):
-        plen = int(rng.integers(4, 32))
+        plen = int(rng.integers(4, max(5, min(32, args.max_len // 2))))
         prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
         eng.submit(Request(rid=i, prompt=prompt,
                            max_new_tokens=args.max_new))
-    done = eng.run()
+
+    t0 = time.time()
+    step_s = []
+    while eng.queue or any(s is not None for s in eng.slots):
+        t1 = time.time()
+        eng.step()
+        step_s.append(time.time() - t1)
     dt = time.time() - t0
+    done = eng.finished
+
     toks = sum(len(r.out_tokens) for r in done)
-    print(f"served {len(done)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s on {jax.device_count()} device(s))")
+    st = eng.stats
+    p50, p99 = (np.percentile(step_s, (50, 99)) * 1e3
+                if step_s else (float("nan"),) * 2)
+    print(f"served {len(done)}/{args.requests} requests, {toks} tokens "
+          f"in {dt:.1f}s ({toks / dt:.1f} tok/s on "
+          f"{jax.device_count()} device(s))")
+    print(f"  step latency p50/p99 {p50:.1f}/{p99:.1f} ms; slot "
+          f"occupancy {st.occupancy(args.slots):.2f}; prefill compiles "
+          f"{st.prefill_compiles} (bound "
+          f"{sched.max_prefill_compiles() or 'unbounded'}); "
+          f"forced prompt tokens {st.forced_tokens}")
+    if eng.rejected:
+        print(f"  rejected {len(eng.rejected)}: "
+              f"{[(r.rid, r.finish_reason) for r in eng.rejected]}")
     for r in done[:4]:
-        print(f"  rid={r.rid} out={r.out_tokens}")
+        print(f"  rid={r.rid} finish={r.finish_reason} "
+              f"out={r.out_tokens}")
 
 
 if __name__ == "__main__":

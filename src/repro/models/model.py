@@ -349,11 +349,23 @@ def _fill_kv_window(k_full: jax.Array, W: int) -> jax.Array:
 
 def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
             max_len: int, rt: ModelRuntime = ModelRuntime(),
+            lengths: Optional[jax.Array] = None,
             ) -> Tuple[Dict[str, jax.Array], jax.Array]:
     """One-pass prefill: returns (primed cache, last-token logits (B, V)).
 
     The cache hands off exactly to :func:`decode_step` — validated by
     tests/test_serve.py against token-by-token decoding.
+
+    ``lengths`` (B,) int32 marks each row's *real* prompt length when
+    ``batch['tokens']`` is right-padded to a bucketed length (the serve
+    scheduler's anti-recompile path): the cache position is set to the
+    real length and the returned logits are gathered at ``lengths - 1``
+    instead of the padded tail. Rows padded this way are only valid for
+    attention-family caches — the padded keys land at cache rows
+    ``>= length`` where the decode mask hides them until they are
+    overwritten. SSM/hybrid recurrent state would absorb the pad tokens,
+    so callers must pass exact-length rows for those families (the
+    scheduler's chunked-prefill mode does exactly that).
     """
     x = _embed_in(params, cfg, batch, rt)
     B, S, _ = x.shape
@@ -365,7 +377,10 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     W = _cache_window(cfg, max_len)
     dtype = rt.dtype
     fam = cfg.family
-    pos = jnp.full((B,), S, jnp.int32)
+    if lengths is None:
+        pos = jnp.full((B,), S, jnp.int32)
+    else:
+        pos = jnp.asarray(lengths, jnp.int32)
     if fam in ("dense", "moe", "vlm", "audio"):
         kvs = cachemat                      # (k, v): (nL, B, S, Hkv, hd)
         k = jax.vmap(lambda t: _fill_kv_window(t, W))(kvs[0])
@@ -388,7 +403,12 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
                  "ssm": ssm.astype(jnp.float32),
                  "k": k.astype(dtype), "v": v.astype(dtype)}
 
-    x = norm(x[:, -1:, :], params["final_norm"], cfg.norm,
+    if lengths is None:
+        x_last = x[:, -1:, :]
+    else:
+        idx = jnp.clip(pos - 1, 0, S - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    x = norm(x_last, params["final_norm"], cfg.norm,
              policy=rt.kernel_policy())
     logits = _unembed(params, cfg, x)[:, 0]
     return cache, logits
@@ -401,6 +421,24 @@ def _cache_window(cfg: ModelConfig, max_len: int) -> int:
     if cfg.sliding_window:
         return min(cfg.sliding_window, max_len)
     return max_len
+
+
+def cache_token_budget(cfg: ModelConfig, max_len: int,
+                       prompt_len: int) -> int:
+    """How many *new* tokens a sequence of ``prompt_len`` may decode
+    before its cache positions exceed ``max_len`` — the cache-bounds
+    contract between the model and every serving caller.
+
+    :func:`decode_step` writes the new key at ``pos % W`` and masks with
+    ``slot <= pos``; for full-attention families ``W == max_len``, so a
+    write at ``pos >= max_len`` wraps onto row 0 and destroys the oldest
+    live context — silently. Sliding-window caches wrap by design, but
+    RoPE positions and the serving budget are still counted against
+    ``max_len``. Callers (the ServeEngine) must therefore never decode a
+    sequence past ``prompt_len + budget`` tokens; a non-positive return
+    means the prompt itself cannot be admitted.
+    """
+    return max_len - prompt_len
 
 
 def cache_spec(cfg: ModelConfig, batch: int, max_len: int,

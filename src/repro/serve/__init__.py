@@ -1,3 +1,14 @@
-from repro.serve.engine import ServeEngine, Request, make_serve_step
+"""Serving subsystem: scheduled, sampled, budget-checked continuous
+batching — single-device or mesh-sharded."""
+from repro.serve.engine import (EngineStats, Request, ServeEngine,
+                                make_serve_step)
+from repro.serve.sampling import Sampler
+from repro.serve.scheduler import (AdmissionPlan, Scheduler,
+                                   default_buckets)
+from repro.serve.sharded import ShardedServeEngine
 
-__all__ = ["ServeEngine", "Request", "make_serve_step"]
+__all__ = [
+    "ServeEngine", "ShardedServeEngine", "Request", "EngineStats",
+    "Sampler", "Scheduler", "AdmissionPlan", "default_buckets",
+    "make_serve_step",
+]

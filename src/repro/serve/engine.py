@@ -1,17 +1,40 @@
-"""Serving engine: prefill + batched decode with continuous batching.
+"""Serving engine: scheduled prefill + batched decode with continuous
+batching.
 
 The engine holds one jointly-batched cache of ``n_slots`` sequences;
 each slot has its own position counter (``cache['pos']`` is per-
 sequence). Finished slots are refilled from the request queue by
-prefilling the new prompt (batch=1) and splicing its cache into the
-slot — insertion is a pure pytree update, so the decode step stays one
-compiled function (the 'generic reusable architecture' of serving: one
-engine, every request shape).
+prefilling the new prompt at a :class:`~repro.serve.scheduler.Scheduler`
+-chosen bucketed shape and splicing its cache into the slot — insertion
+is a pure pytree update keyed by the cache spec's *declared* batch axes
+(``models.model.CACHE_AXES``), so the decode step stays one compiled
+function and splice can never guess an axis from a shape collision.
+
+Three seed bugs are fixed here, each with a regression test:
+
+* **KV overflow** — ``decode_step`` writes at ``pos % W`` unbounded, so
+  a request with ``prompt_len + max_new_tokens > max_len`` used to wrap
+  the cache and corrupt live context. The budget is now enforced at
+  :meth:`submit` (``models.model.cache_token_budget``): reject loudly,
+  truncate loudly, or raise — never clamp silently. ``run`` raises when
+  requests remain unserved instead of dropping them from ``finished``.
+* **splice-by-shape** — ``_splice`` matched ``big.shape[0] ==
+  small.shape[0] and small.shape[1] == 1``, which corrupts the cache as
+  soon as ``n_slots`` collides with ``n_layers``/small dims (e.g. a
+  width-``n_slots`` batched admission). It now indexes the declared
+  batch axis and splices any number of slots at once.
+* **dead ``greedy=False``** — the non-greedy admission branch emitted
+  a hard-coded token 0. Admission and decode both route through one
+  seeded :class:`~repro.serve.sampling.Sampler` (greedy / temperature /
+  top-k), with EOS and per-request stop-token termination.
 """
 from __future__ import annotations
 
+import logging
+from collections import Counter
+from contextlib import nullcontext
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -19,8 +42,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, init_cache, prefill
-from repro.models.model import ModelRuntime
+from repro.models import (cache_token_budget, decode_step, init_cache,
+                          prefill)
+from repro.models.model import CACHE_AXES, ModelRuntime
+from repro.serve.sampling import Sampler
+from repro.serve.scheduler import AdmissionPlan, Scheduler
+
+log = logging.getLogger("repro.serve")
 
 
 @dataclass
@@ -28,8 +56,34 @@ class Request:
     rid: int
     prompt: np.ndarray                  # (S,) int32
     max_new_tokens: int = 16
+    stop_tokens: Tuple[int, ...] = ()   # per-request terminators (w/ eos_id)
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[str] = None  # length | stop | rejected: <why>
+    truncated: bool = False              # overflow='truncate' shrank budget
+
+
+@dataclass
+class EngineStats:
+    """Live counters the benchmark and the compile-count tests read."""
+
+    prefill_traces: Counter = field(default_factory=Counter)  # (len, width)
+    decode_traces: int = 0
+    prefills: int = 0          # prefill *calls* (>= admissions / width)
+    steps: int = 0             # decode steps executed
+    occupancy_sum: int = 0     # sum of active slots over decode steps
+    tokens_out: int = 0        # sampled (served) tokens
+    forced_tokens: int = 0     # chunked-prefill prompt tokens decode-fed
+    rejected: int = 0
+
+    @property
+    def prefill_compiles(self) -> int:
+        return sum(self.prefill_traces.values())
+
+    def occupancy(self, n_slots: int) -> float:
+        if not self.steps:
+            return 0.0
+        return self.occupancy_sum / (self.steps * n_slots)
 
 
 def make_serve_step(cfg: ModelConfig, rt: ModelRuntime) -> Callable:
@@ -41,81 +95,270 @@ def make_serve_step(cfg: ModelConfig, rt: ModelRuntime) -> Callable:
     return jax.jit(step)
 
 
-def _splice(cache, single, slot: int):
-    """Insert a batch=1 prefilled cache into batch slot `slot`."""
+def _splice(cache: Dict[str, jax.Array], single: Dict[str, jax.Array],
+            slots, rows: Optional[Sequence[int]] = None,
+            axes: Optional[Dict[str, tuple]] = None) -> Dict[str, Any]:
+    """Insert prefilled cache rows into batch ``slots``.
 
-    def ins(big, small):
-        if big.ndim == 1:                       # pos (B,)
-            return big.at[slot].set(small[0])
-        # find the batch axis: caches are either (B, ...) or (L, B, ...)
-        if big.shape[0] == small.shape[0] and small.shape[1] == 1:
-            return big.at[:, slot].set(small[:, 0])
-        return big.at[slot].set(small[0])
-
-    return jax.tree.map(ins, cache, single)
+    The batch axis of every leaf comes from the cache spec's declared
+    axis names (``models.model.CACHE_AXES`` — ``"pos": ("batch",)``,
+    ``"k": (None, "batch", ...)``, ...), never from shape heuristics:
+    the seed version guessed from ``big.shape[0] == small.shape[0]``,
+    which silently corrupts whenever ``n_slots`` collides with
+    ``n_layers`` or a non-unit small batch (see tests). ``slots`` may be
+    one int or a sequence; ``rows`` selects which rows of ``single`` to
+    take (default: the first ``len(slots)``).
+    """
+    axes = CACHE_AXES if axes is None else axes
+    if isinstance(slots, (int, np.integer)):
+        slots = [int(slots)]
+    slots = list(slots)
+    rows = list(rows) if rows is not None else list(range(len(slots)))
+    if len(rows) != len(slots):
+        raise ValueError(f"rows/slots length mismatch: {rows} vs {slots}")
+    out = dict(cache)
+    sl = jnp.asarray(slots, jnp.int32)
+    rw = jnp.asarray(rows, jnp.int32)
+    for name, big in cache.items():
+        leaf_axes = axes.get(name)
+        if leaf_axes is None or "batch" not in leaf_axes:
+            raise KeyError(
+                f"cache leaf {name!r} has no declared batch axis "
+                f"(CACHE_AXES) — refusing to splice by shape guessing")
+        b = leaf_axes.index("batch")
+        small = single[name]
+        pre = (slice(None),) * b
+        out[name] = big.at[pre + (sl,)].set(
+            small[pre + (rw,)].astype(big.dtype))
+    return out
 
 
 class ServeEngine:
+    """Continuous-batching engine: scheduled admission, budget-checked
+    caches, pluggable sampling, measurable stats.
+
+    ``overflow`` governs requests whose ``prompt_len + max_new_tokens``
+    exceeds the ``max_len`` cache budget (the cache-bounds contract,
+    :func:`repro.models.model.cache_token_budget`):
+
+    * ``'reject'`` (default) — the request lands in :attr:`rejected`
+      with ``finish_reason='rejected: ...'`` and a warning log; it is
+      never silently dropped.
+    * ``'truncate'`` — ``max_new_tokens`` is shrunk to fit (loudly,
+      ``truncated=True``); a prompt that cannot emit even one token is
+      still rejected.
+    * ``'error'`` — :meth:`submit` raises ``ValueError``.
+
+    ``greedy=False`` maps onto a seeded temperature sampler for
+    backwards compatibility; pass ``sampler=`` for full control.
+    """
+
     def __init__(self, params, cfg: ModelConfig, rt: ModelRuntime,
                  n_slots: int = 4, max_len: int = 512,
-                 greedy: bool = True):
+                 greedy: bool = True,
+                 sampler: Optional[Sampler] = None,
+                 scheduler: Optional[Scheduler] = None,
+                 overflow: str = "reject",
+                 eos_id: Optional[int] = None):
+        if cfg.is_encoder_only:
+            raise ValueError(
+                f"{cfg.name} is encoder-only: no autoregressive decode")
+        if overflow not in ("reject", "truncate", "error"):
+            raise ValueError(f"unknown overflow policy {overflow!r}")
         self.params = params
         self.cfg = cfg
         self.rt = rt
         self.n_slots = n_slots
         self.max_len = max_len
-        self.greedy = greedy
-        self.cache = init_cache(cfg, n_slots, max_len, rt.dtype)
+        self.sampler = sampler if sampler is not None else (
+            Sampler() if greedy else Sampler(kind="temperature"))
+        self.scheduler = scheduler if scheduler is not None else (
+            Scheduler(cfg=cfg, max_len=max_len))
+        if self.scheduler.max_len != max_len:
+            raise ValueError(
+                f"scheduler.max_len={self.scheduler.max_len} != engine "
+                f"max_len={max_len}")
+        self.overflow = overflow
+        self.eos_id = eos_id
+        self.cache = self._place_cache(
+            init_cache(cfg, n_slots, max_len, rt.dtype))
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.last_tokens = np.zeros((n_slots,), np.int32)
         self.queue: List[Request] = []
         self.finished: List[Request] = []
-        self._step = make_serve_step(cfg, rt)
-        self._prefill = jax.jit(
-            lambda p, toks: prefill(p, cfg, {"tokens": toks},
-                                    max_len, rt))
+        self.rejected: List[Request] = []
+        self.stats = EngineStats()
+        self._tails: List[List[int]] = [[] for _ in range(n_slots)]
+        self._rngs: List[Optional[np.random.Generator]] = [None] * n_slots
+
+        stats = self.stats
+
+        def _step_fn(p, cache, tokens):
+            stats.decode_traces += 1          # trace-time side effect
+            return decode_step(p, cfg, cache, tokens, rt)
+
+        def _prefill_fn(p, toks, lengths):
+            stats.prefill_traces[(toks.shape[1], toks.shape[0])] += 1
+            return prefill(p, cfg, {"tokens": toks}, max_len, rt,
+                           lengths=lengths)
+
+        self._step = jax.jit(_step_fn)
+        self._prefill = jax.jit(_prefill_fn)
+
+    # -------------------------------------------------------- placement hooks
+    def _place_cache(self, cache):
+        """Sharded subclasses device_put the cache onto the mesh."""
+        return cache
+
+    def _ctx(self):
+        """Ambient context every jitted call runs under (mesh + recipe
+        for the sharded engine; nothing here)."""
+        return nullcontext()
 
     # ---------------------------------------------------------------- admin
     def submit(self, req: Request):
-        self.queue.append(req)
+        """Admission control: enforce the cache-bounds budget *now*,
+        not after the cache has been corrupted."""
+        S = int(len(req.prompt))
+        budget = cache_token_budget(self.cfg, self.max_len, S)
+        if S < 1:
+            self._reject(req, "empty prompt")
+            return
+        if req.max_new_tokens <= budget:
+            self.queue.append(req)
+            return
+        why = (f"prompt_len={S} + max_new_tokens={req.max_new_tokens} "
+               f"> max_len={self.max_len}")
+        if self.overflow == "error":
+            raise ValueError(f"request rid={req.rid} over cache budget: "
+                             f"{why}")
+        if self.overflow == "truncate" and budget >= 1:
+            log.warning("rid=%d truncated: %s -> max_new_tokens=%d",
+                        req.rid, why, budget)
+            req.max_new_tokens = budget
+            req.truncated = True
+            self.queue.append(req)
+            return
+        self._reject(req, why)
 
+    def _reject(self, req: Request, why: str):
+        log.warning("rid=%d rejected: %s", req.rid, why)
+        req.finish_reason = f"rejected: {why}"
+        self.rejected.append(req)
+        self.stats.rejected += 1
+
+    # ---------------------------------------------------------------- admit
     def _admit(self):
-        for slot in range(self.n_slots):
-            if self.slots[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
-                single_cache, logits = self._prefill(self.params, toks)
-                self.cache = _splice(self.cache, single_cache, slot)
-                nxt = int(jnp.argmax(logits[0])) if self.greedy else 0
-                req.out_tokens.append(nxt)
-                self.last_tokens[slot] = nxt
-                self.slots[slot] = req
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        while free and self.queue:
+            group, plan = self._next_group(len(free))
+            slots = free[: len(group)]
+            free = free[len(group):]
+            self._admit_group(group, plan, slots)
+
+    def _next_group(self, n_free: int) -> Tuple[List[Request], AdmissionPlan]:
+        """Pop up to ``admit_width`` head-of-queue requests sharing one
+        admission plan (one prefill shape)."""
+        width = self.scheduler.admit_width
+        req0 = self.queue.pop(0)
+        plan = self.scheduler.plan(len(req0.prompt))
+        group = [req0]
+        while (len(group) < min(width, n_free) and self.queue
+               and self.scheduler.plan(len(self.queue[0].prompt)) == plan):
+            group.append(self.queue.pop(0))
+        return group, plan
+
+    def _admit_group(self, group: List[Request], plan: AdmissionPlan,
+                     slots: List[int]):
+        width = max(self.scheduler.admit_width, len(group))
+        P = plan.prefill_len
+        toks = np.zeros((width, P), np.int32)
+        lengths = np.ones((width,), np.int32)
+        for j, req in enumerate(group):
+            if plan.mode == "pad":
+                toks[j, : len(req.prompt)] = req.prompt
+                lengths[j] = len(req.prompt)
+            else:                            # chunk: exact prefix
+                toks[j] = req.prompt[:P]
+                lengths[j] = P
+        with self._ctx():
+            single, logits = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lengths))
+        self.stats.prefills += 1
+        self.cache = _splice(self.cache, single, slots,
+                             rows=range(len(group)))
+        logits_np = np.asarray(logits)
+        for j, (req, slot) in enumerate(zip(group, slots)):
+            self.slots[slot] = req
+            self._rngs[slot] = self.sampler.stream(req.rid)
+            if plan.mode == "chunk" and P < len(req.prompt):
+                # chunked prefill: the rest of the prompt rides the
+                # decode step as forced inputs; prefill logits unused.
+                self.last_tokens[slot] = int(req.prompt[P])
+                self._tails[slot] = [int(t) for t in req.prompt[P + 1:]]
+            else:
+                self._tails[slot] = []
+                self._emit(slot, logits_np[j])
 
     # ---------------------------------------------------------------- step
+    def _emit(self, slot: int, logits_row: np.ndarray):
+        """Sample one token for ``slot``; retire the request on budget
+        exhaustion or a stop token."""
+        req = self.slots[slot]
+        tok = self.sampler.sample(logits_row, self._rngs[slot])
+        req.out_tokens.append(tok)
+        self.last_tokens[slot] = tok
+        self.stats.tokens_out += 1
+        stop = set(req.stop_tokens)
+        if self.eos_id is not None:
+            stop.add(self.eos_id)
+        if tok in stop:
+            req.done, req.finish_reason = True, "stop"
+        elif len(req.out_tokens) >= req.max_new_tokens:
+            req.done, req.finish_reason = True, "length"
+        if req.done:
+            self.finished.append(req)
+            self.slots[slot] = None
+            self._tails[slot] = []
+            self._rngs[slot] = None
+
     def step(self) -> int:
-        """One engine iteration: admit new requests, decode one token for
-        every active slot. Returns number of active slots."""
+        """One engine iteration: admit new requests, decode one token
+        for every active slot. Returns the number of active slots."""
         self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return 0
-        self.cache, logits = self._step(
-            self.params, self.cache, jnp.asarray(self.last_tokens))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        with self._ctx():
+            self.cache, logits = self._step(
+                self.params, self.cache, jnp.asarray(self.last_tokens))
+        logits_np = np.asarray(logits)
         for slot in active:
-            req = self.slots[slot]
-            req.out_tokens.append(int(nxt[slot]))
-            self.last_tokens[slot] = nxt[slot]
-            if len(req.out_tokens) >= req.max_new_tokens:
-                req.done = True
-                self.finished.append(req)
-                self.slots[slot] = None
+            if self._tails[slot]:
+                # chunked prefill tail: force the next prompt token
+                self.last_tokens[slot] = self._tails[slot].pop(0)
+                self.stats.forced_tokens += 1
+            else:
+                self._emit(slot, logits_np[slot])
+        self.stats.steps += 1
+        self.stats.occupancy_sum += len(active)
         return len(active)
 
     def run(self, max_iters: int = 1000) -> List[Request]:
+        """Drive until every submitted request finished. Raises if
+        ``max_iters`` elapses with requests still queued or in flight —
+        never silently drops work (rejected requests are surfaced via
+        :attr:`rejected`, not lost)."""
         it = 0
         while (self.queue or any(s is not None for s in self.slots)) \
                 and it < max_iters:
             self.step()
             it += 1
+        leftover = [r.rid for r in self.queue] + \
+            [r.rid for r in self.slots if r is not None]
+        if leftover:
+            raise RuntimeError(
+                f"run(max_iters={max_iters}) exhausted with requests "
+                f"never served: rids={leftover} — raise max_iters or "
+                f"check admission")
         return self.finished

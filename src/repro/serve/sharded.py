@@ -1,0 +1,43 @@
+"""Sharded serving: the slot batch lives on a device mesh.
+
+:class:`ShardedServeEngine` is the single-device engine with placement
+swapped out: parameters are laid out by a ``repro.dist`` sharding
+recipe (default :data:`~repro.dist.sharding.DECODE_RECIPE` — weights
+resident / tensor-parallel over ``model``, the KV cache's batch axis
+over ``data``), the decode cache is placed via the same recipe through
+the declared ``CACHE_AXES`` names, and every jitted call runs under the
+ambient mesh + ``axis_rules`` so ``constrain`` resolves the logical
+names inside the model. Scheduling, sampling, budgets, and stats are
+inherited unchanged — one engine, every placement — and the sharded
+engine is token-for-token identical to the single-device one
+(tests/test_multidevice.py).
+"""
+from __future__ import annotations
+
+from contextlib import ExitStack
+from typing import Optional
+
+from repro.dist.sharding import DECODE_RECIPE, Recipe, axis_rules, shard_tree
+from repro.launch.mesh import use_mesh
+from repro.models.model import CACHE_AXES, axes_tree
+from repro.serve.engine import ServeEngine
+
+
+class ShardedServeEngine(ServeEngine):
+    def __init__(self, params, cfg, rt, mesh,
+                 recipe: Optional[Recipe] = None, **kw):
+        self.mesh = mesh
+        self.recipe = recipe if recipe is not None else DECODE_RECIPE
+        super().__init__(params, cfg, rt, **kw)
+        self.params = shard_tree(self.params, axes_tree(cfg), self.recipe,
+                                 mesh)
+
+    def _place_cache(self, cache):
+        cache_axes = {k: CACHE_AXES[k] for k in cache}
+        return shard_tree(cache, cache_axes, self.recipe, self.mesh)
+
+    def _ctx(self):
+        stack = ExitStack()
+        stack.enter_context(use_mesh(self.mesh))
+        stack.enter_context(axis_rules(self.recipe))
+        return stack

@@ -1,0 +1,173 @@
+"""Scheduler coverage: bucket planning (pad vs chunk vs exact), the
+sliding-window pad cap, and the headline compile-count guarantee —
+admissions at many distinct prompt lengths trigger at most
+``len(prefill_lengths)`` prefill compilations (counted via trace-time
+side effects in the engine's jitted prefill)."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import ARCHS, smoke_config
+from repro.models import init_params
+from repro.models.model import ModelRuntime
+from repro.serve import Request, Scheduler, ServeEngine, default_buckets
+
+RT = ModelRuntime(dtype="float32", remat="none", attn_chunk=16,
+                  moe_dropless=True)
+
+
+# ------------------------------------------------------------- planning
+def test_default_buckets_cover_max_len():
+    assert default_buckets(64) == (8, 16, 32, 64)
+    assert default_buckets(100) == (8, 16, 32, 64)
+    assert default_buckets(4) == (4,)          # never empty
+
+
+def test_plan_pad_mode_dense():
+    cfg = smoke_config(ARCHS["minicpm-2b"])
+    s = Scheduler(cfg=cfg, max_len=64)
+    assert s.pad_safe
+    p = s.plan(5)
+    assert (p.mode, p.prefill_len) == ("pad", 8)
+    assert s.plan(16).prefill_len == 16        # exact bucket hit
+    assert s.plan(17).prefill_len == 32
+    assert s.plan(63) == s.plan(64)            # top bucket
+    # prompts past the largest bucket fall back to chunked prefill
+    s2 = Scheduler(cfg=cfg, max_len=64, buckets=(8, 16))
+    p = s2.plan(20)
+    assert (p.mode, p.prefill_len) == ("chunk", 16)
+
+
+def test_plan_chunk_mode_recurrent():
+    """SSM/hybrid state would absorb pad tokens: only exact-length
+    prefixes are prefillable, the tail decodes."""
+    for arch in ("mamba2-1.3b", "zamba2-2.7b"):
+        cfg = smoke_config(ARCHS[arch])
+        s = Scheduler(cfg=cfg, max_len=64)
+        assert not s.pad_safe
+        assert s.plan(5).mode == "chunk"
+        assert s.plan(5).prefill_len == 1      # below smallest bucket
+        assert s.plan(20) == s.plan(25)        # both floor to 16
+        assert s.plan(20).prefill_len == 16
+        assert s.plan(16).mode == "pad"        # exact hit: no padding
+        assert 1 in s.prefill_lengths
+
+
+def test_plan_sliding_window_caps_padding():
+    """Padding past the KV window would rotate pad keys over live rows
+    in the circular cache -> chunk mode instead."""
+    cfg = smoke_config(ARCHS["mixtral-8x22b"])   # smoke window = 32
+    s = Scheduler(cfg=cfg, max_len=128)
+    assert s.window == 32
+    assert s.plan(20).mode == "pad"              # ceil 32 <= W
+    p = s.plan(40)                               # ceil 64 > W
+    assert p.mode == "chunk" and p.prefill_len == 32
+
+
+def test_scheduler_validation():
+    cfg = smoke_config(ARCHS["minicpm-2b"])
+    with pytest.raises(ValueError):
+        Scheduler(cfg=cfg, max_len=64, buckets=(128,))
+    with pytest.raises(ValueError):
+        Scheduler(cfg=cfg, max_len=64, admit_width=0)
+    with pytest.raises(ValueError):
+        Scheduler(cfg=cfg, max_len=64).plan(0)
+    with pytest.raises(ValueError):
+        ServeEngine(None, cfg, RT,
+                    scheduler=Scheduler(cfg=cfg, max_len=32),
+                    max_len=64)
+
+
+# --------------------------------------------------------- compile count
+def _serve_lengths(cfg, params, lengths, scheduler=None, max_len=64,
+                   **kw):
+    eng = ServeEngine(params, cfg, RT, n_slots=2, max_len=max_len,
+                      scheduler=scheduler, **kw)
+    for i, plen in enumerate(lengths):
+        eng.submit(Request(rid=i,
+                           prompt=((np.arange(plen) + i)
+                                   % cfg.vocab_size).astype(np.int32),
+                           max_new_tokens=3))
+    done = eng.run(max_iters=4000)
+    return eng, {r.rid: r.out_tokens for r in done}
+
+
+def test_compile_count_bounded_by_buckets():
+    """REGRESSION (per-length recompiles): 14 distinct prompt lengths
+    used to mean 14 prefill compilations; bucketed admission stays
+    within the scheduler's published bound."""
+    cfg = smoke_config(ARCHS["minicpm-2b"])
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lengths = list(range(3, 17))                 # 14 distinct lengths
+    eng, done = _serve_lengths(cfg, params, lengths)
+    assert len(done) == len(lengths)
+    bound = eng.scheduler.max_prefill_compiles()
+    assert eng.stats.prefill_compiles <= bound <= 5
+    # the exact-mode escape hatch really does compile per length
+    exact = Scheduler(cfg=cfg, max_len=64, buckets=())
+    eng2, _ = _serve_lengths(cfg, params, lengths, scheduler=exact)
+    assert eng2.stats.prefill_compiles == len(set(lengths))
+
+
+def test_compile_count_bounded_chunk_mode():
+    cfg = smoke_config(ARCHS["mamba2-1.3b"])
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lengths = list(range(2, 14))
+    eng, done = _serve_lengths(cfg, params, lengths)
+    assert len(done) == len(lengths)
+    assert eng.stats.prefill_compiles \
+        <= eng.scheduler.max_prefill_compiles() <= 6
+
+
+# ------------------------------------------------------------ parity
+@pytest.mark.parametrize("arch", ["minicpm-2b",       # pad mode
+                                  "mamba2-1.3b",      # chunk mode (SSM)
+                                  "zamba2-2.7b",      # chunk (hybrid)
+                                  "mixtral-8x22b"])   # window-capped MoE
+def test_bucketed_matches_exact_prefill(arch):
+    """Bucketed/chunked admission is token-for-token identical to
+    exact-length prefill, for every cache family."""
+    cfg = smoke_config(ARCHS[arch])
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lengths = [1, 3, 7, 9, 18]
+    exact = Scheduler(cfg=cfg, max_len=64, buckets=())
+    _, want = _serve_lengths(cfg, params, lengths, scheduler=exact)
+    eng, got = _serve_lengths(cfg, params, lengths)
+    assert got == want
+    assert eng.stats.prefill_compiles \
+        <= eng.scheduler.max_prefill_compiles()
+
+
+# ------------------------------------------------- benchmark contract
+def test_serve_throughput_benchmark_contract(tmp_path):
+    """`benchmarks.run --only serve_throughput` must emit tok/s +
+    latency percentiles + a predicted-vs-measured throughput row into
+    <artifacts>/bench/results.json (the acceptance contract)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"),
+               REPRO_ARTIFACT_DIR=str(tmp_path))
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick", "--only",
+         "serve_throughput"],
+        cwd=repo, env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    with open(tmp_path / "bench" / "results.json") as f:
+        payload = json.load(f)
+    row = payload["benchmarks"]["serve_throughput"]
+    assert row["pass"] is True
+    for key in ("tok_s", "p50_token_ms", "p99_token_ms", "occupancy",
+                "predicted_tok_s", "measured_over_predicted"):
+        assert row[key] is not None and np.isfinite(row[key]), (key, row)
+    with open(tmp_path / "bench" / "serve_throughput.json") as f:
+        detail = json.load(f)
+    assert detail[0]["prefill_compiles"] <= detail[0]["compile_bound"]
+    with open(tmp_path / "bench"
+              / "serve_throughput_predictions.json") as f:
+        preds = json.load(f)
+    assert any(p["model"] == "tpu_v5e_analytic" for p in preds)
