@@ -24,7 +24,10 @@ def build_benches(quick: bool = False) -> list:
     """
     n_cases = 6 if quick else 12
     fig11_kw = {"n_particles": 12, "n_iters": 12} if quick else {}
-    serve_kw = {"n_requests": 8, "max_new": 6} if quick else {}
+    # quick: shrink the trace + paged-comparison window; full: the
+    # mixed-context trace spans 128..4k-token contexts
+    serve_kw = ({"n_requests": 8, "max_new": 6, "mixed_max_len": 256}
+                if quick else {"mixed_max_len": 4096, "mixed_requests": 12})
     return [
         ("fig4", "fig4_pipeline_model_error", "run", (), {}),
         ("fig5", "fig5_generic_model_error", "run", (), {}),

@@ -1,5 +1,6 @@
 """§Serving throughput: a synthetic open-loop arrival trace through the
-live ServeEngine, cross-checked against the analytical models.
+live ServeEngine, cross-checked against the analytical models — plus
+the paged-KV headline comparisons.
 
 The paper's loop is *benchmark the accelerator against the targeted
 workload, then compare the analytical prediction to the measurement*
@@ -10,12 +11,23 @@ this repo runs end-to-end, so this benchmark closes that loop for it:
   arrivals never wait on completions) is driven through the engine on
   this host; we report tok/s, p50/p99 per-token latency (each decode
   step's wall time attributed to the tokens it emitted), request
-  latency percentiles, and mean slot occupancy.
+  latency percentiles, mean slot occupancy, and KV-cache utilization
+  (live context tokens / allocated cache tokens) + KV HBM bytes.
 * **predicted** — the *same* serving workload expressed in the Workload
   IR (``lm_workload`` decode profile at the engine's slot batch and
   mean live context) evaluated by ``TPUModel`` (analytic, v5e) and —
   when a kernel calibration exists — ``MeasuredModel``; the row pairs
   each prediction with the measured tok/s.
+* **paged vs fixed** — the same seeded mixed-context trace (short chats
+  through near-window long contexts) through the fixed-slot engine and
+  the :class:`~repro.serve.paged.PagedServeEngine` *at equal KV HBM
+  bytes*: the paged pool holds exactly the fixed engine's
+  ``n_slots * ceil(W/page_size)`` pages, yet sustains more in-flight
+  requests (``max_active``) with bit-identical tokens — concurrency
+  bounded by bytes, not slots.
+* **prefix caching** — a repeated-system-prompt trace served cold
+  (``prefix_cache=False``) and warm: the warm engine's hit rate and
+  prefill-token/call savings are recorded, with token parity enforced.
 
 On a CPU CI host the absolute ratio is meaningless (the prediction
 targets a TPU); the contract here is the *schema*: every run emits the
@@ -73,9 +85,123 @@ def _predictions(cfg, n_slots: int, mean_ctx: int, measured_tok_s: float):
     return wl, rows
 
 
+def _finished_tokens(engine) -> dict:
+    return {r.rid: list(r.out_tokens) for r in engine.finished}
+
+
+def _paged_vs_fixed(params, cfg, rt, *, n_slots: int, window: int,
+                    page_size: int, n_requests: int, max_new: int,
+                    seed: int):
+    """Closed-loop mixed-context trace through both engines at equal KV
+    HBM bytes; returns (row, ok)."""
+    from repro.models.model import page_count
+    from repro.serve import PagedServeEngine, Request, ServeEngine
+
+    rng = np.random.default_rng(seed + 1)
+    lo = max(8, window // 32)
+    prompts = []
+    for i in range(n_requests):
+        if i % 4 == 3:                      # every 4th request: long ctx
+            plen = int(rng.integers(window // 4, window // 2))
+        else:                               # the rest: short chats
+            plen = int(rng.integers(lo, max(lo + 1, window // 8)))
+        prompts.append(rng.integers(0, cfg.vocab_size, plen)
+                       .astype(np.int32))
+
+    npp = page_count(window, page_size)
+    fixed = ServeEngine(params, cfg, rt, n_slots=n_slots, max_len=window)
+    paged = PagedServeEngine(
+        params, cfg, rt, n_slots=min(3 * n_slots, n_requests),
+        max_len=window, page_size=page_size,
+        page_budget=n_slots * npp + 1)      # == the fixed engine's HBM
+    for eng in (fixed, paged):
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=p.copy(),
+                               max_new_tokens=max_new))
+        eng.run(max_iters=5000)
+
+    parity = _finished_tokens(fixed) == _finished_tokens(paged)
+    fixed_bytes = fixed.kv_cache_bytes()
+    paged_bytes = paged.kv_cache_bytes()
+    # the pool may exceed the fixed cache only by the null page + the
+    # ceil(W/ps) round-up — never by a meaningful margin
+    hbm_ok = paged_bytes <= fixed_bytes * 1.05 + 1
+    row = {
+        "trace": "mixed_context", "window": window,
+        "page_size": page_size, "requests": n_requests,
+        "n_slots_fixed": n_slots, "n_slots_paged": paged.n_slots,
+        "kv_hbm_bytes_fixed": fixed_bytes,
+        "kv_hbm_bytes_paged": paged_bytes,
+        "max_active_fixed": fixed.stats.max_active,
+        "max_active_paged": paged.stats.max_active,
+        "kv_utilization_fixed": fixed.stats.kv_utilization,
+        "kv_utilization_paged": paged.stats.kv_utilization,
+        "steps_fixed": fixed.stats.steps, "steps_paged": paged.stats.steps,
+        "token_parity": parity,
+    }
+    ok = (parity and hbm_ok
+          and paged.stats.max_active > n_slots
+          and paged.stats.kv_utilization > fixed.stats.kv_utilization)
+    return row, ok
+
+
+def _prefix_trace(params, cfg, rt, *, window: int, page_size: int,
+                  n_requests: int, max_new: int, seed: int):
+    """Repeated-system-prompt trace, cold vs warm prefix cache; returns
+    (row, ok)."""
+    from repro.serve import PagedServeEngine, Request
+
+    rng = np.random.default_rng(seed + 2)
+    sys_len = page_size * max(2, window // (4 * page_size))
+    sys_prompt = rng.integers(0, cfg.vocab_size, sys_len).astype(np.int32)
+    prompts = []
+    for _ in range(n_requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, max(5, window // 8))))
+        prompts.append(np.concatenate([sys_prompt,
+                                       tail.astype(np.int32)]))
+
+    engines = {}
+    for mode, on in (("cold", False), ("warm", True)):
+        eng = PagedServeEngine(params, cfg, rt, n_slots=4, max_len=window,
+                               page_size=page_size, prefix_cache=on)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=p.copy(),
+                               max_new_tokens=max_new))
+        eng.run(max_iters=5000)
+        engines[mode] = eng
+    cold, warm = engines["cold"], engines["warm"]
+
+    parity = _finished_tokens(cold) == _finished_tokens(warm)
+    hit_rate = warm.prefix_hit_rate
+    row = {
+        "trace": "repeated_prefix", "window": window,
+        "page_size": page_size, "requests": n_requests,
+        "system_prompt_tokens": sys_len,
+        "prefix_hit_rate": hit_rate,
+        "prefix_hits": warm.stats.prefix_hits,
+        "prefix_hit_tokens": warm.stats.prefix_hit_tokens,
+        "prefill_tokens_cold": cold.stats.prefill_tokens,
+        "prefill_tokens_warm": warm.stats.prefill_tokens,
+        "prefill_calls_cold": cold.stats.prefills,
+        "prefill_calls_warm": warm.stats.prefills,
+        "prefill_compiles_cold": cold.stats.prefill_compiles,
+        "prefill_compiles_warm": warm.stats.prefill_compiles,
+        "kv_utilization_warm": warm.stats.kv_utilization,
+        "token_parity": parity,
+    }
+    ok = (parity and warm.stats.prefix_hits > 0 and hit_rate > 0
+          and warm.stats.prefill_tokens < cold.stats.prefill_tokens
+          and warm.stats.prefills < cold.stats.prefills)
+    return row, ok
+
+
 def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
         max_len: int = 128, max_new: int = 12, seed: int = 0,
-        load: float = 0.8, rate: Optional[float] = None):
+        load: float = 0.8, rate: Optional[float] = None,
+        page_size: int = 16, mixed_max_len: int = 512,
+        mixed_requests: Optional[int] = None,
+        prefix_requests: int = 6):
     import jax
 
     from repro.configs import ARCHS, smoke_config
@@ -158,7 +284,8 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
     wl, pred_rows = _predictions(cfg, n_slots, max(mean_ctx, 1), tok_s)
 
     rows = [{
-        "arch": cfg.name, "requests": len(done), "tokens": toks,
+        "arch": cfg.name, "trace": "open_loop", "requests": len(done),
+        "tokens": toks,
         "wall_s": wall, "tok_s": tok_s, "rate_req_s": rate,
         "p50_token_ms": float(np.percentile(lat, 50)) if len(lat) else None,
         "p99_token_ms": float(np.percentile(lat, 99)) if len(lat) else None,
@@ -167,11 +294,28 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
         "p99_req_s": float(np.percentile(req_lat, 99)) if len(req_lat)
         else None,
         "occupancy": occupancy,
+        "kv_utilization": eng.stats.kv_utilization,
+        "kv_hbm_bytes": eng.kv_cache_bytes(),
+        "max_active": eng.stats.max_active,
         "prefill_compiles": eng.stats.prefill_compiles,
         "compile_bound": eng.scheduler.max_prefill_compiles(),
         "rejected": len(eng.rejected),
         "workload": wl.name,
     }]
+
+    # -- paged-KV headline traces (closed-loop, seeded, token parity)
+    mixed_n = mixed_requests if mixed_requests is not None \
+        else max(8, min(16, n_requests))
+    paged_row, paged_ok = _paged_vs_fixed(
+        params, cfg, rt, n_slots=n_slots, window=mixed_max_len,
+        page_size=page_size, n_requests=mixed_n, max_new=max_new,
+        seed=seed)
+    rows.append(paged_row)
+    prefix_row, prefix_ok = _prefix_trace(
+        params, cfg, rt, window=mixed_max_len, page_size=page_size,
+        n_requests=prefix_requests, max_new=max_new, seed=seed)
+    rows.append(prefix_row)
+
     emit("serve_throughput", rows)
     if pred_rows:
         emit("serve_throughput_predictions", pred_rows)
@@ -180,7 +324,8 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
           and not eng.rejected and np.isfinite(tok_s)
           and len(pred_rows) >= 1
           and eng.stats.prefill_compiles
-          <= eng.scheduler.max_prefill_compiles())
+          <= eng.scheduler.max_prefill_compiles()
+          and paged_ok and prefix_ok)
     print(f"[serve/{cfg.name}] {len(done)} reqs, {toks} tokens, "
           f"{tok_s:.1f} tok/s, p50/p99 token "
           f"{rows[0]['p50_token_ms']:.1f}/{rows[0]['p99_token_ms']:.1f} "
@@ -188,9 +333,29 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
           f"{eng.stats.prefill_compiles} prefill compiles "
           f"(bound {eng.scheduler.max_prefill_compiles()}); "
           f"{len(pred_rows)} prediction row(s)")
+    print(f"[serve/paged] equal-HBM mixed trace: max_active "
+          f"{paged_row['max_active_paged']} paged vs "
+          f"{paged_row['max_active_fixed']} fixed (n_slots={n_slots}), "
+          f"kv_util {paged_row['kv_utilization_paged']:.2f} vs "
+          f"{paged_row['kv_utilization_fixed']:.2f}, "
+          f"parity={paged_row['token_parity']}")
+    print(f"[serve/prefix] hit_rate={prefix_row['prefix_hit_rate']:.2f} "
+          f"prefill_tokens {prefix_row['prefill_tokens_warm']} warm vs "
+          f"{prefix_row['prefill_tokens_cold']} cold, "
+          f"parity={prefix_row['token_parity']}")
     return {"tok_s": tok_s, "p50_token_ms": rows[0]["p50_token_ms"],
             "p99_token_ms": rows[0]["p99_token_ms"],
             "occupancy": occupancy, "requests": len(done),
+            "kv_utilization": rows[0]["kv_utilization"],
+            "kv_hbm_bytes": rows[0]["kv_hbm_bytes"],
+            "max_active_paged": paged_row["max_active_paged"],
+            "max_active_fixed": paged_row["max_active_fixed"],
+            "paged_token_parity": paged_row["token_parity"],
+            "kv_utilization_paged": paged_row["kv_utilization_paged"],
+            "prefix_hit_rate": prefix_row["prefix_hit_rate"],
+            "prefix_prefill_tokens_saved":
+            prefix_row["prefill_tokens_cold"]
+            - prefix_row["prefill_tokens_warm"],
             "predicted_tok_s": pred_rows[0]["predicted_tok_s"]
             if pred_rows else None,
             "measured_over_predicted":

@@ -1,18 +1,23 @@
 """Serve a small model with batched requests: scheduled prefill +
 continuous-batching decode, mixed prompt lengths, slot reuse — under a
-selectable KernelPolicy and Sampler.
+selectable KernelPolicy, Sampler, and KV-cache layout.
 
     PYTHONPATH=src python examples/serve_batched.py
     PYTHONPATH=src python examples/serve_batched.py --use-kernels
     PYTHONPATH=src python examples/serve_batched.py --temperature 0.8
+    PYTHONPATH=src python examples/serve_batched.py --page-size 8
 
 ``--use-kernels`` routes every hot spot (prefill attention, split-KV
-decode attention, rmsnorm) through the Pallas kernels (interpret mode
-off-TPU) via the dispatch layer; the emitted tokens are identical to
-the XLA policy — the live demonstration of the kernel dispatch seam.
+decode attention — paged or contiguous — and rmsnorm) through the
+Pallas kernels (interpret mode off-TPU) via the dispatch layer; the
+emitted tokens are identical to the XLA policy — the live
+demonstration of the kernel dispatch seam.
 ``--temperature`` switches the (per-request seeded, reproducible)
-sampler off greedy. The scheduler buckets the ten distinct prompt
-lengths onto a handful of prefill shapes — watch the compile count.
+sampler off greedy. ``--page-size`` swaps the per-slot contiguous
+cache for the paged engine (pooled KV pages + page tables +
+prompt-prefix sharing); tokens are again identical. The scheduler
+buckets the ten distinct prompt lengths onto a handful of prefill
+shapes — watch the compile count.
 """
 import argparse
 import time
@@ -24,7 +29,7 @@ import jax
 from repro.configs import ARCHS, smoke_config
 from repro.models import init_params
 from repro.models.model import ModelRuntime
-from repro.serve import Request, Sampler, ServeEngine
+from repro.serve import PagedServeEngine, Request, Sampler, ServeEngine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--use-kernels", action="store_true",
@@ -33,6 +38,16 @@ ap.add_argument("--use-kernels", action="store_true",
 ap.add_argument("--temperature", type=float, default=0.0,
                 help="> 0 switches greedy decoding to seeded "
                      "temperature sampling")
+ap.add_argument("--page-size", type=int, default=0,
+                help="KV page size in tokens; > 0 serves through the "
+                     "paged engine (pooled pages, not per-slot caches)")
+ap.add_argument("--page-budget", type=int, default=None,
+                help="pool size in pages incl. the null page (default: "
+                     "the fixed engine's equivalent KV HBM)")
+ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                default=True,
+                help="share prompt-prefix pages across requests "
+                     "(paged engine only)")
 args = ap.parse_args()
 
 cfg = smoke_config(ARCHS["starcoder2-3b"])
@@ -43,8 +58,14 @@ sampler = (Sampler(kind="temperature", temperature=args.temperature,
                    top_k=32, seed=0)
            if args.temperature > 0 else Sampler())
 params = init_params(jax.random.PRNGKey(0), cfg)
-eng = ServeEngine(params, cfg, rt, n_slots=4, max_len=128,
-                  sampler=sampler)
+if args.page_size > 0:
+    eng = PagedServeEngine(params, cfg, rt, n_slots=4, max_len=128,
+                           sampler=sampler, page_size=args.page_size,
+                           page_budget=args.page_budget,
+                           prefix_cache=args.prefix_cache)
+else:
+    eng = ServeEngine(params, cfg, rt, n_slots=4, max_len=128,
+                      sampler=sampler)
 
 rng = np.random.default_rng(0)
 t0 = time.time()
@@ -62,7 +83,12 @@ print(f"served {len(done)} requests / {toks} tokens in {dt:.1f}s "
       f"with 4 slots (continuous batching); "
       f"{st.prefill_compiles} prefill compiles for 10 prompt lengths "
       f"(bound {eng.scheduler.max_prefill_compiles()}), "
-      f"occupancy {st.occupancy(4):.2f}")
+      f"occupancy {st.occupancy(4):.2f}, "
+      f"kv utilization {st.kv_utilization:.2f}")
+if args.page_size > 0:
+    print(f"paged: pool={eng.pages.n_pages} pages x {args.page_size} "
+          f"tokens, prefix hits={st.prefix_hits} "
+          f"(hit tokens {st.prefix_hit_tokens})")
 for r in sorted(done, key=lambda r: r.rid):
     print(f"  rid={r.rid:2d} prompt_len={len(r.prompt):2d} "
           f"finish={r.finish_reason} -> {r.out_tokens}")

@@ -44,6 +44,7 @@ ENTRY_FIELDS = ("op", "arch", "shape", "kind", "source_op", "case",
 CALIB_OP_KIND = {
     "prefill_attention": "attention",
     "decode_attention": "attention",
+    "paged_decode_attention": "attention",
     "ssd_scan": "scan",
     "moe_gemm": "matmul",
     "rmsnorm": "norm",

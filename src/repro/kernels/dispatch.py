@@ -17,6 +17,7 @@ Registered ops:
     ==================  =============================  ====================
     prefill_attention   attn_block (train/prefill)     flash_attention
     decode_attention    _attn_decode_one (decode)      decode_attention_splitkv
+    paged_decode_attention  _attn_decode_one_paged     paged_decode_attention_splitkv
     rmsnorm             layers.rmsnorm / norm()        rmsnorm_pallas
     ssd_scan            ssm_block (Mamba-2 SSD)        ssd_scan_pallas
     moe_gemm            moe_ffn dropless expert GEMM   grouped_gemm_padded
@@ -45,8 +46,8 @@ import jax
 # Policy
 # ===========================================================================
 #: Op names, in dispatch-table order.
-KERNEL_OPS = ("prefill_attention", "decode_attention", "rmsnorm",
-              "ssd_scan", "moe_gemm")
+KERNEL_OPS = ("prefill_attention", "decode_attention",
+              "paged_decode_attention", "rmsnorm", "ssd_scan", "moe_gemm")
 
 #: One default eps for every RMSNorm implementation. Historically
 #: ``models.layers.rmsnorm`` and ``kernels.rmsnorm.rmsnorm_pallas`` each
@@ -69,6 +70,7 @@ class KernelPolicy:
 
     prefill_attention: str = "xla"
     decode_attention: str = "xla"
+    paged_decode_attention: str = "xla"
     rmsnorm: str = "xla"
     ssd_scan: str = "xla"
     moe_gemm: str = "xla"
@@ -252,6 +254,21 @@ def _decode_attention_pallas(q, k_cache, v_cache, kv_mask, *,
                              block_k: int = 512, **_):
     from repro.kernels.ops import decode_attention
     return decode_attention(q, k_cache, v_cache, kv_mask, block_k=block_k)
+
+
+@register_impl("paged_decode_attention", "xla")
+def _paged_decode_attention_xla(q, k_pages, v_pages, page_table, kv_mask,
+                                **_):
+    from repro.models.attention import paged_decode_attention
+    return paged_decode_attention(q, k_pages, v_pages, page_table, kv_mask)
+
+
+@register_impl("paged_decode_attention", "pallas")
+def _paged_decode_attention_pallas(q, k_pages, v_pages, page_table, kv_mask,
+                                   *, pages_per_block: int = 1, **_):
+    from repro.kernels.ops import paged_decode_attention
+    return paged_decode_attention(q, k_pages, v_pages, page_table, kv_mask,
+                                  pages_per_block=pages_per_block)
 
 
 @register_impl("rmsnorm", "xla")

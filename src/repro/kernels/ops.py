@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention import decode_attention_splitkv
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.paged_attention import paged_decode_attention_splitkv
 from repro.kernels.moe_gemm import grouped_gemm_padded, sort_by_expert
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
@@ -41,6 +42,15 @@ def decode_attention(q, k_cache, v_cache, kv_mask, *,
     return decode_attention_splitkv(q, k_cache, v_cache, kv_mask,
                                     block_k=block_k,
                                     interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_block",))
+def paged_decode_attention(q, k_pages, v_pages, page_table, kv_mask, *,
+                           pages_per_block: int = 1) -> jax.Array:
+    return paged_decode_attention_splitkv(q, k_pages, v_pages, page_table,
+                                          kv_mask,
+                                          pages_per_block=pages_per_block,
+                                          interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

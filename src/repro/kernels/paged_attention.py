@@ -1,0 +1,129 @@
+"""Paged split-KV decode attention — TPU Pallas.
+
+The paged serving engine (``repro.serve.paged``) keeps each layer's KV
+cache as one pooled ``(n_pages, page_size, Hkv, D)`` buffer plus a
+per-sequence page table; a decode step must gather a sequence's pages
+*through the table* while reducing them into one attention output.
+
+This extends :func:`~repro.kernels.decode_attention.decode_attention_splitkv`
+with a scalar-prefetched page-table gather: the table rides in SMEM
+(``pltpu.PrefetchScalarGridSpec``) and every K/V BlockSpec index map
+reads it to fetch *physical* pages, so the kernel never materializes a
+contiguous copy of the sequence — the page indirection happens in the
+block pipeline itself.
+
+    grid = (B * Hkv, n_splits, pages_per_block)
+    per program: q group tile (G, D), one physical KV page (page_size, D)
+
+The innermost grid dim revisits one (m, l, acc) partial per split
+(online softmax across its ``pages_per_block`` pages); the tiny
+cross-split merge runs as plain XLA in the wrapper, exactly like the
+contiguous split-KV kernel.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(pt_ref, q_ref, k_ref, v_ref, mask_ref,
+                         o_ref, m_ref, l_ref, *, sm_scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+        m_ref[0] = jnp.full_like(m_ref[0], NEG_INF)
+        l_ref[0] = jnp.zeros_like(l_ref[0])
+
+    q = q_ref[0].astype(jnp.float32)                  # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)         # (ps, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    valid = mask_ref[0]                               # (1, ps) int32
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    s = jnp.where(valid > 0, s, NEG_INF)              # (G, ps)
+
+    m_prev = m_ref[0]                                 # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_ref[0] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc = o_ref[0] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    o_ref[0] = acc
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+
+def paged_decode_attention_splitkv(q, k_pages, v_pages, page_table,
+                                   kv_mask, *, pages_per_block: int = 1,
+                                   interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, D); k/v_pages: (P, ps, Hkv, D) pooled page buffers;
+    page_table: (B, NP) int32 physical page of each logical page;
+    kv_mask: (B, NP * ps) bool over logical rows."""
+    B, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    NP = page_table.shape[1]
+    G = Hq // Hkv
+    pb = max(1, min(pages_per_block, NP))
+    NPp = -(-NP // pb) * pb
+    ns = NPp // pb
+
+    qg = q.reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
+    mk = kv_mask.reshape(B, 1, NP * ps).astype(jnp.int32)
+    pt = page_table.astype(jnp.int32)
+    if NPp != NP:
+        # pad the table with the reserved null page; its rows are masked
+        pt = jnp.pad(pt, ((0, 0), (0, NPp - NP)))
+        mk = jnp.pad(mk, ((0, 0), (0, 0), (0, (NPp - NP) * ps)))
+
+    kern = functools.partial(_paged_decode_kernel,
+                             sm_scale=1.0 / math.sqrt(D))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hkv, ns, pb),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda bh, s, j, pt: (bh, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda bh, s, j, pt:
+                         (pt[bh // Hkv, s * pb + j], 0, bh % Hkv, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda bh, s, j, pt:
+                         (pt[bh // Hkv, s * pb + j], 0, bh % Hkv, 0)),
+            pl.BlockSpec((1, 1, ps),
+                         lambda bh, s, j, pt: (bh // Hkv, 0, s * pb + j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, D), lambda bh, s, j, pt: (bh, s, 0)),
+            pl.BlockSpec((1, G, 1), lambda bh, s, j, pt: (bh, s, 0)),
+            pl.BlockSpec((1, G, 1), lambda bh, s, j, pt: (bh, s, 0)),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B * Hkv, ns * G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B * Hkv, ns * G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * Hkv, ns * G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pt, qg, k_pages, v_pages, mk)
+
+    # merge partials across splits (tiny, plain XLA)
+    o = o.reshape(B * Hkv, ns, G, D)
+    m = m.reshape(B * Hkv, ns, G, 1)
+    l = l.reshape(B * Hkv, ns, G, 1)
+    m_all = jnp.max(m, axis=1, keepdims=True)
+    w = jnp.exp(m - m_all)
+    l_all = jnp.sum(l * w, axis=1)
+    out = jnp.sum(o * w, axis=1) / jnp.maximum(l_all, 1e-30)
+    return out.reshape(B, Hkv, G, D).reshape(B, Hq, D).astype(q.dtype)

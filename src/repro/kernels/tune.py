@@ -74,6 +74,10 @@ class TunePreset:
     # per-chip batch slice; IR-derived FLOP/byte counts are scaled to
     # the slice so calibration entries stay self-consistent.
     bench_batch: int = 0
+    # KV page sizes swept for the paged decode-attention op (one case
+    # per size; the block dimension rides the pallas grid's
+    # ``pages_per_block``)
+    paged_page_sizes: Tuple[int, ...] = (16,)
     description: str = ""
 
     def arch(self, name: str) -> ModelConfig:
@@ -109,6 +113,10 @@ CI = TunePreset(
             "xla": ({},),
             "pallas": ({"block_k": 32}, {"block_k": 64}),
         },
+        "paged_decode_attention": {
+            "xla": ({},),
+            "pallas": ({"pages_per_block": 1}, {"pages_per_block": 2}),
+        },
         "rmsnorm": {
             "xla": ({},),
             "pallas": ({"block_rows": 64}, {"block_rows": 128}),
@@ -126,6 +134,7 @@ CI = TunePreset(
     shrink_archs=True,
     reps=3,
     warmup=1,
+    paged_page_sizes=(8, 16),
     description="smoke grid, smoke archs, shrunken shapes (CPU interpret "
                 "mode, minutes) — validates schema + plumbing",
 )
@@ -156,6 +165,11 @@ FULL = TunePreset(
             "pallas": ({"block_k": 256}, {"block_k": 512},
                        {"block_k": 1024}),
         },
+        "paged_decode_attention": {
+            "xla": ({},),
+            "pallas": ({"pages_per_block": 2}, {"pages_per_block": 4},
+                       {"pages_per_block": 8}),
+        },
         "rmsnorm": {
             "xla": ({},),
             "pallas": ({"block_rows": 128}, {"block_rows": 256},
@@ -176,6 +190,7 @@ FULL = TunePreset(
     warmup=3,
     bench_batch=4,       # per-chip slice: a 32k-seq global batch of 32
                          # in f32 would blow a single chip's HBM
+    paged_page_sizes=(16, 64),
     description="MXU-aligned grid at paper-scale shapes (real TPU host)",
 )
 
@@ -212,7 +227,8 @@ def _find_op(wl: Workload, pred) -> Optional[Any]:
 
 
 def cases_for_cell(cfg: ModelConfig, shape: ShapeConfig,
-                   bench_batch: int = 0) -> List[BenchCase]:
+                   bench_batch: int = 0,
+                   page_sizes: Sequence[int] = (16,)) -> List[BenchCase]:
     """Derive the microbenchmark cases one workload cell implies.
 
     The Workload IR decides *which* ops exist (a pure-SSM model yields
@@ -274,6 +290,35 @@ def cases_for_cell(cfg: ModelConfig, shape: ShapeConfig,
             attn_op.name,
             {"B": B, "W": W, "Hq": nq, "Hkv": nkv, "D": hd},
             attn_op.flops * frac, attn_op.total_bytes * frac, mk_dec))
+
+        # paged twin: same attention work gathered through a page table
+        # over a shuffled pool (the serving engine's layout), one case
+        # per preset page size — the extra gather indirection is exactly
+        # what the measured model must price against contiguous decode
+        for ps in page_sizes:
+            npp = -(-W // ps)
+            n_pool = B * npp + 1          # + the engine's null page 0
+
+            def mk_paged(key=key, ps=ps, npp=npp, n_pool=n_pool, W=W):
+                ks = jax.random.split(key, 4)
+                q = jax.random.normal(ks[0], (B, nq, hd), jnp.float32)
+                kp = jax.random.normal(ks[1], (n_pool, ps, nkv, hd),
+                                       jnp.float32)
+                vp = jax.random.normal(ks[2], (n_pool, ps, nkv, hd),
+                                       jnp.float32)
+                pt = jax.random.permutation(
+                    ks[3], jnp.arange(1, n_pool, dtype=jnp.int32)
+                ).reshape(B, npp)
+                mask = jnp.broadcast_to(
+                    jnp.arange(npp * ps)[None, :] < W, (B, npp * ps))
+                return q, kp, vp, pt, mask
+
+            cases.append(BenchCase(
+                "paged_decode_attention", cfg.name, shape.name, shape.kind,
+                attn_op.name,
+                {"B": B, "W": W, "Hq": nq, "Hkv": nkv, "D": hd,
+                 "page_size": ps, "n_pages": n_pool},
+                attn_op.flops * frac, attn_op.total_bytes * frac, mk_paged))
 
     scan_op = _find_op(wl, lambda o: o.kind == "scan")
     if scan_op is not None and not decode:
@@ -431,7 +476,8 @@ def run_tuning(preset: TunePreset,
         cfg = preset.arch(arch_name)
         shape = preset.shape(shape_name)
         for case in cases_for_cell(cfg, shape,
-                                   bench_batch=preset.bench_batch):
+                                   bench_batch=preset.bench_batch,
+                                   page_sizes=preset.paged_page_sizes):
             t0 = time.time()
             entry = run_case(case, preset)
             entries.append(entry)

@@ -22,7 +22,8 @@ from repro.configs import get_arch, smoke_config
 from repro.core.workload.registry import resolve_arch
 from repro.models import init_params
 from repro.models.model import ModelRuntime
-from repro.serve import (Request, Sampler, Scheduler, ServeEngine,
+from repro.serve import (PagedServeEngine, Request, Sampler, Scheduler,
+                         ServeEngine, ShardedPagedServeEngine,
                          ShardedServeEngine)
 
 
@@ -51,6 +52,18 @@ def main():
     ap.add_argument("--overflow", choices=("reject", "truncate", "error"),
                     default="reject",
                     help="policy for prompt+max-new > max-len requests")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV page size in tokens; > 0 selects the paged "
+                         "engine (pooled pages + page tables instead of "
+                         "per-slot contiguous caches)")
+    ap.add_argument("--page-budget", type=int, default=None,
+                    help="total pages in the pool incl. the null page "
+                         "(default: slots * ceil(W/page_size) + 1 — the "
+                         "fixed engine's KV HBM)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share prompt-prefix pages across requests "
+                         "(paged engine only)")
     ap.add_argument("--mesh", default=None,
                     help="DxM device mesh, e.g. 2x4 -> (data, model); "
                          "shards the engine via the decode recipe")
@@ -78,13 +91,19 @@ def main():
                       top_k=args.top_k, seed=args.seed)
     kw = dict(n_slots=args.slots, max_len=args.max_len, sampler=sampler,
               scheduler=sched, overflow=args.overflow, eos_id=args.eos)
+    if args.page_size > 0:
+        kw.update(page_size=args.page_size, page_budget=args.page_budget,
+                  prefix_cache=args.prefix_cache)
     if args.mesh:
         from repro.launch.mesh import make_mesh
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = make_mesh((d, m), ("data", "model"))
-        eng = ShardedServeEngine(params, cfg, rt, mesh, **kw)
+        eng_cls = ShardedPagedServeEngine if args.page_size > 0 \
+            else ShardedServeEngine
+        eng = eng_cls(params, cfg, rt, mesh, **kw)
     else:
-        eng = ServeEngine(params, cfg, rt, **kw)
+        eng_cls = PagedServeEngine if args.page_size > 0 else ServeEngine
+        eng = eng_cls(params, cfg, rt, **kw)
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -114,6 +133,15 @@ def main():
           f"{st.prefill_compiles} (bound "
           f"{sched.max_prefill_compiles() or 'unbounded'}); "
           f"forced prompt tokens {st.forced_tokens}")
+    print(f"  kv cache {eng.kv_cache_bytes() / 2**20:.1f} MiB, "
+          f"utilization {st.kv_utilization:.2f}, max in-flight "
+          f"{st.max_active}")
+    if args.page_size > 0:
+        print(f"  pages: size={args.page_size} pool={eng.pages.n_pages} "
+              f"free={eng.pages.free_pages} prefix hit_rate="
+              f"{eng.prefix_hit_rate:.2f} hits={st.prefix_hits} "
+              f"hit_tokens={st.prefix_hit_tokens} "
+              f"evictions={eng.pages.evictions}")
     if eng.rejected:
         print(f"  rejected {len(eng.rejected)}: "
               f"{[(r.rid, r.finish_reason) for r in eng.rejected]}")

@@ -127,3 +127,21 @@ def decode_attention(q, k_cache, v_cache, kv_mask) -> jax.Array:
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgw,bwhd->bhgd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table,
+                           kv_mask) -> jax.Array:
+    """One-token decode through a paged KV pool (XLA gather reference).
+
+    q: (B, Hq, D); k/v_pages: (P, ps, Hkv, D) pooled page buffers;
+    page_table: (B, NP) int32 maps each sequence's logical page to a
+    physical pool page; kv_mask: (B, NP * ps) bool over logical rows.
+    Rows pointing at unowned pages MUST be masked off by the caller —
+    the gather itself reads whatever the table says.
+    """
+    B = q.shape[0]
+    ps, Hkv, D = k_pages.shape[1:]
+    NP = page_table.shape[1]
+    k = k_pages[page_table].reshape(B, NP * ps, Hkv, D)
+    v = v_pages[page_table].reshape(B, NP * ps, Hkv, D)
+    return decode_attention(q, k, v, kv_mask)

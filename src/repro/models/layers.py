@@ -9,6 +9,7 @@ derive from one source of truth.
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple, Union
 
@@ -42,12 +43,17 @@ def _is_def(x) -> bool:
 
 
 def init_from_defs(defs: DefTree, key: jax.Array):
-    """Deterministic init: each leaf's key is folded from its path."""
+    """Deterministic init: each leaf's key is folded from its path.
+
+    The path hash must be stable across *processes* (``hash()`` is
+    salted per interpreter run), or the same PRNGKey silently yields
+    different parameters in every invocation.
+    """
     flat, treedef = jax.tree_util.tree_flatten_with_path(defs, is_leaf=_is_def)
 
     leaves = []
     for path, d in flat:
-        h = hash(jax.tree_util.keystr(path)) % (2**31 - 1)
+        h = zlib.crc32(jax.tree_util.keystr(path).encode()) % (2**31 - 1)
         k = jax.random.fold_in(key, h)
         leaves.append(_init_leaf(d, k))
     return jax.tree.unflatten(treedef, leaves)

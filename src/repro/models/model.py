@@ -485,6 +485,209 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
             for k, (s, d) in cache_spec(cfg, batch, max_len, dtype).items()}
 
 
+# ---------------------------------------------------------------------------
+# Paged cache (block-paged KV pool + per-sequence page tables)
+# ---------------------------------------------------------------------------
+def page_count(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` cache rows (ceil division)."""
+    return -(-int(tokens) // int(page_size))
+
+
+def paged_cache_spec(cfg: ModelConfig, n_slots: int, n_pages: int,
+                     page_size: int, max_len: int,
+                     dtype: str = "bfloat16") -> Dict[str, Tuple[Tuple, Any]]:
+    """{name: (shape, dtype)} for the paged decode cache.
+
+    KV lives in one pooled buffer per layer group — ``kp``/``vp``:
+    ``(L, n_pages, page_size, Hkv, hd)`` — addressed through per-slot
+    page tables ``pt: (n_slots, ceil(W / page_size))``. Physical page 0
+    is reserved as the null page: unowned table entries point at it and
+    retired slots write their (masked) decode rows into it, so stale
+    slots can never corrupt pages that have been rebound to live
+    requests. Recurrent state (``conv``/``ssm``) is O(1) per slot and
+    stays contiguous; only the KV rows page.
+    """
+    hd = cfg.head_dim
+    W = _cache_window(cfg, max_len)
+    npp = page_count(W, page_size)
+    spec: Dict[str, Tuple[Tuple, Any]] = {
+        "pos": ((n_slots,), jnp.int32),
+        "pt": ((n_slots, npp), jnp.int32),
+    }
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "audio"):
+        shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, hd)
+        spec["kp"] = (shape, dtype)
+        spec["vp"] = (shape, dtype)
+    if fam in ("ssm", "hybrid"):
+        cs = SSM.ssm_cache_shapes(cfg, n_slots)
+        spec["conv"] = ((cfg.n_layers,) + cs["conv"], dtype)
+        spec["ssm"] = ((cfg.n_layers,) + cs["ssm"], "float32")
+    if fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.shared_attn_period
+        shape = (n_groups, n_pages, page_size, cfg.n_kv_heads, hd)
+        spec["kp"] = (shape, dtype)
+        spec["vp"] = (shape, dtype)
+    return spec
+
+
+#: Logical axis names for the paged cache. The page pool has no batch
+#: axis (slots share it through their tables) — it shards along
+#: ``kv_heads``, the same name the contiguous cache uses, so the
+#: existing decode recipes place it tensor-parallel unchanged.
+PAGED_CACHE_AXES = {
+    "pos": ("batch",),
+    "pt": ("batch", None),
+    "kp": (None, None, None, "kv_heads", None),
+    "vp": (None, None, None, "kv_heads", None),
+    "conv": CACHE_AXES["conv"],
+    "ssm": CACHE_AXES["ssm"],
+}
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
+                     page_size: int, max_len: int,
+                     dtype: str = "bfloat16"):
+    return {k: jnp.zeros(s, d)
+            for k, (s, d) in paged_cache_spec(
+                cfg, n_slots, n_pages, page_size, max_len, dtype).items()}
+
+
+def write_prefill_pages(kp, vp, k, v, page_ids, *, page_size: int):
+    """Scatter contiguous prefill KV rows into the page pool.
+
+    k/v: (L, width, S, Hkv, hd) — the ``prefill`` cache's contiguous
+    rows (circular layout for windowed configs, which the page mapping
+    preserves: logical row r lives at page ``r // page_size``).
+    page_ids: (width, n_write) int32 — the physical destination of each
+    row's first ``n_write`` logical pages; pad rows point at the null
+    page (their garbage stays masked forever).
+    """
+    L, width, S = k.shape[:3]
+    n_write = page_ids.shape[1]
+    need = n_write * page_size
+    if need > S:
+        pad = ((0, 0), (0, 0), (0, need - S), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    tail = k.shape[3:]
+    kb = k[:, :, :need].reshape((L, width * n_write, page_size) + tail)
+    vb = v[:, :, :need].reshape((L, width * n_write, page_size) + tail)
+    flat = page_ids.reshape(-1)
+    kp = kp.at[:, flat].set(kb.astype(kp.dtype))
+    vp = vp.at[:, flat].set(vb.astype(vp.dtype))
+    return kp, vp
+
+
+def _attn_decode_one_paged(p, x, kp, vp, pt, pos, window: int,
+                           page_size: int, cfg: ModelConfig,
+                           rt: ModelRuntime):
+    """One-layer paged attention for one token. The new K/V row is
+    written *through the page table* at physical page
+    ``pt[b, (pos % W) // ps]``, then attention gathers every owned page
+    via the ``paged_decode_attention`` dispatch op."""
+    B = x.shape[0]
+    W, ps = window, page_size
+    pol = rt.kernel_policy()
+    h = norm(x, p["ln1"], cfg.norm, policy=pol)[:, None, :]   # (B,1,d)
+    q, k, v = _attn_proj(p, h, cfg, policy=pol)
+    posv = pos[:, None]                                  # (B, 1)
+    if cfg.rope == "mrope":
+        posv = jnp.broadcast_to(posv[None], (3, B, 1))
+    q, k = L.apply_rope(q, k, posv, cfg)
+    row = (pos % W).astype(jnp.int32)                    # (B,)
+    phys = jnp.take_along_axis(pt, (row // ps)[:, None], axis=1)[:, 0]
+    kp = kp.at[phys, row % ps].set(k[:, 0].astype(kp.dtype))
+    vp = vp.at[phys, row % ps].set(v[:, 0].astype(vp.dtype))
+    Wp = pt.shape[1] * ps
+    ar = jnp.arange(Wp)[None, :]
+    mask = (ar <= pos[:, None]) & (ar < W)               # (B, Wp)
+    o = dispatch("paged_decode_attention", pol, q[:, 0], kp, vp, pt, mask)
+    x = x + o.reshape(B, -1) @ p["wo"].astype(x.dtype)
+
+    h2 = norm(x, p["ln2"], cfg.norm, policy=pol)
+    if cfg.moe is not None:
+        y, _ = MOE.moe_ffn(p["moe"], h2[:, None, :], cfg, dropless=True,
+                           policy=pol)
+        y = y[:, 0]
+    else:
+        y = _mlp(p, h2[:, None, :], cfg)[:, 0]
+    return x + y, kp, vp
+
+
+def decode_step_paged(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
+                      tokens: jax.Array, rt: ModelRuntime,
+                      *, page_size: int, window: int,
+                      ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Paged twin of :func:`decode_step`: same per-family bodies, with
+    attention layers routed through the page pool. Pure-SSM configs have
+    no KV to page — their state cache decodes unchanged (the page table
+    rides along untouched)."""
+    fam = cfg.family
+    if fam == "ssm":
+        return decode_step(params, cfg, cache, tokens, rt)
+    pos = cache["pos"]
+    pt = cache["pt"]
+    x = params["embed"].astype(rt.dtype)[tokens]          # (B, d)
+    pol = rt.kernel_policy()
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        def body(x_, xs):
+            lp, kp, vp = xs
+            x2, kp, vp = _attn_decode_one_paged(
+                lp, x_, kp, vp, pt, pos, window, page_size, cfg, rt)
+            return x2, (kp, vp)
+
+        x, (kp_new, vp_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["kp"], cache["vp"]),
+            unroll=rt.unroll_layers)
+        new_cache = dict(cache, pos=pos + 1, kp=kp_new, vp=vp_new)
+    else:  # hybrid
+        period = cfg.shared_attn_period
+        n_groups = cfg.n_layers // period
+        nshared = cfg.n_shared_attn_blocks
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+            params["blocks"])
+        conv_g = cache["conv"].reshape((n_groups, period)
+                                       + cache["conv"].shape[1:])
+        ssm_g = cache["ssm"].reshape((n_groups, period)
+                                     + cache["ssm"].shape[1:])
+
+        def group(x_, xs):
+            gp, gidx, convs, ssms, kp, vp = xs
+
+            def inner(xc, ys):
+                lp, conv, ssm = ys
+                h = norm(xc, lp["ln"], cfg.norm, policy=pol)
+                y, st = SSM.ssm_decode_step(lp["ssm"], h, {
+                    "conv": conv, "ssm": ssm}, cfg, policy=pol)
+                return xc + y, (st["conv"], st["ssm"])
+
+            x_, (conv2, ssm2) = jax.lax.scan(inner, x_, (gp, convs, ssms),
+                                             unroll=rt.unroll_layers)
+            sel = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, gidx % nshared, 0, keepdims=False), params["shared"])
+            x_, kp, vp = _attn_decode_one_paged(
+                sel, x_, kp, vp, pt, pos, window, page_size, cfg, rt)
+            return x_, (conv2, ssm2, kp, vp)
+
+        x, (conv2, ssm2, kp_new, vp_new) = jax.lax.scan(
+            group, x, (grouped, jnp.arange(n_groups), conv_g, ssm_g,
+                       cache["kp"], cache["vp"]),
+            unroll=rt.unroll_layers)
+        new_cache = dict(
+            cache, pos=pos + 1,
+            conv=conv2.reshape(cache["conv"].shape),
+            ssm=ssm2.reshape(cache["ssm"].shape),
+            kp=kp_new, vp=vp_new)
+
+    x = norm(x[:, None, :], params["final_norm"], cfg.norm, policy=pol)
+    logits = _unembed(params, cfg, x)[:, 0]
+    return new_cache, logits
+
+
 def _attn_decode_one(p, x, k_cache, v_cache, pos, cfg: ModelConfig,
                      rt: ModelRuntime):
     """One-layer attention for one token. x: (B, d); pos: (B,) int32 —

@@ -1,14 +1,19 @@
 """Serving subsystem: scheduled, sampled, budget-checked continuous
-batching — single-device or mesh-sharded."""
+batching over contiguous or paged KV caches — single-device or
+mesh-sharded."""
 from repro.serve.engine import (EngineStats, Request, ServeEngine,
                                 make_serve_step)
+from repro.serve.paged import (PagedKVCache, PagedServeEngine,
+                               PagesExhausted, prefix_page_keys)
 from repro.serve.sampling import Sampler
 from repro.serve.scheduler import (AdmissionPlan, Scheduler,
                                    default_buckets)
-from repro.serve.sharded import ShardedServeEngine
+from repro.serve.sharded import ShardedPagedServeEngine, ShardedServeEngine
 
 __all__ = [
     "ServeEngine", "ShardedServeEngine", "Request", "EngineStats",
     "Sampler", "Scheduler", "AdmissionPlan", "default_buckets",
     "make_serve_step",
+    "PagedKVCache", "PagedServeEngine", "ShardedPagedServeEngine",
+    "PagesExhausted", "prefix_page_keys",
 ]

@@ -70,11 +70,21 @@ class EngineStats:
     prefill_traces: Counter = field(default_factory=Counter)  # (len, width)
     decode_traces: int = 0
     prefills: int = 0          # prefill *calls* (>= admissions / width)
+    prefill_tokens: int = 0    # tokens pushed through prefill (width * P)
     steps: int = 0             # decode steps executed
     occupancy_sum: int = 0     # sum of active slots over decode steps
+    max_active: int = 0        # peak concurrent in-flight requests
     tokens_out: int = 0        # sampled (served) tokens
     forced_tokens: int = 0     # chunked-prefill prompt tokens decode-fed
     rejected: int = 0
+    # KV-cache accounting (per decode step): live context tokens of the
+    # active slots vs the cache tokens their requests hold allocated —
+    # the paged-vs-fixed utilization headline in serve_throughput.
+    live_token_steps: int = 0
+    alloc_token_steps: int = 0
+    # prefix caching (paged engine only)
+    prefix_hits: int = 0         # admissions that reused >= 1 prefix page
+    prefix_hit_tokens: int = 0   # prompt tokens served from shared pages
 
     @property
     def prefill_compiles(self) -> int:
@@ -84,6 +94,15 @@ class EngineStats:
         if not self.steps:
             return 0.0
         return self.occupancy_sum / (self.steps * n_slots)
+
+    @property
+    def kv_utilization(self) -> float:
+        """Live context tokens / allocated cache tokens, averaged over
+        decode steps. The fixed-slot engine allocates the full window
+        per active request; the paged engine only the pages held."""
+        if not self.alloc_token_steps:
+            return 0.0
+        return self.live_token_steps / self.alloc_token_steps
 
 
 def make_serve_step(cfg: ModelConfig, rt: ModelRuntime) -> Callable:
@@ -180,8 +199,7 @@ class ServeEngine:
                 f"max_len={max_len}")
         self.overflow = overflow
         self.eos_id = eos_id
-        self.cache = self._place_cache(
-            init_cache(cfg, n_slots, max_len, rt.dtype))
+        self.cache = self._place_cache(self._init_cache())
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.last_tokens = np.zeros((n_slots,), np.int32)
         self.queue: List[Request] = []
@@ -190,12 +208,15 @@ class ServeEngine:
         self.stats = EngineStats()
         self._tails: List[List[int]] = [[] for _ in range(n_slots)]
         self._rngs: List[Optional[np.random.Generator]] = [None] * n_slots
+        # host-side per-slot context length (tokens in cache), for the
+        # KV-utilization stats — no device sync on the hot path
+        self._host_pos = np.zeros((n_slots,), np.int64)
 
         stats = self.stats
 
         def _step_fn(p, cache, tokens):
             stats.decode_traces += 1          # trace-time side effect
-            return decode_step(p, cfg, cache, tokens, rt)
+            return self._decode(p, cache, tokens)
 
         def _prefill_fn(p, toks, lengths):
             stats.prefill_traces[(toks.shape[1], toks.shape[0])] += 1
@@ -214,6 +235,41 @@ class ServeEngine:
         """Ambient context every jitted call runs under (mesh + recipe
         for the sharded engine; nothing here)."""
         return nullcontext()
+
+    # ------------------------------------------------------------ cache hooks
+    def _init_cache(self):
+        """Build the (device) decode cache; the paged engine overrides
+        this with the pooled page buffers."""
+        return init_cache(self.cfg, self.n_slots, self.max_len,
+                          self.rt.dtype)
+
+    def _decode(self, params, cache, tokens):
+        """The decode step the jitted engine step traces."""
+        return decode_step(params, self.cfg, cache, tokens, self.rt)
+
+    def _cache_axes(self) -> Dict[str, tuple]:
+        """Declared logical axes of every cache leaf (splice + sharding)."""
+        return CACHE_AXES
+
+    def _release_slot(self, slot: int):
+        """Called when the request in ``slot`` retires (paged engine
+        frees its pages here)."""
+
+    def kv_cache_bytes(self) -> int:
+        """Device bytes held by the KV cache (contiguous or paged)."""
+        return sum(int(self.cache[k].size
+                       * jnp.dtype(self.cache[k].dtype).itemsize)
+                   for k in ("k", "v", "kp", "vp") if k in self.cache)
+
+    def _live_tokens(self, active: List[int]) -> int:
+        W = self.scheduler.window
+        return int(sum(min(int(self._host_pos[s]), W) for s in active))
+
+    def _allocated_tokens(self, active: List[int]) -> int:
+        """Cache tokens the active requests hold allocated. The fixed
+        engine reserves one full window per slot, live or not — that is
+        exactly the dead-HBM problem the paged engine removes."""
+        return self.n_slots * self.scheduler.window
 
     # ---------------------------------------------------------------- admin
     def submit(self, req: Request):
@@ -268,8 +324,9 @@ class ServeEngine:
             group.append(self.queue.pop(0))
         return group, plan
 
-    def _admit_group(self, group: List[Request], plan: AdmissionPlan,
-                     slots: List[int]):
+    def _prefill_group(self, group: List[Request], plan: AdmissionPlan):
+        """Run the (bucketed) batched prefill for one admission group;
+        returns the single-call cache + per-row logits."""
         width = max(self.scheduler.admit_width, len(group))
         P = plan.prefill_len
         toks = np.zeros((width, P), np.int32)
@@ -285,20 +342,39 @@ class ServeEngine:
             single, logits = self._prefill(
                 self.params, jnp.asarray(toks), jnp.asarray(lengths))
         self.stats.prefills += 1
+        self.stats.prefill_tokens += width * P
+        return single, np.asarray(logits)
+
+    def _admit_group(self, group: List[Request], plan: AdmissionPlan,
+                     slots: List[int]):
+        single, logits_np = self._prefill_group(group, plan)
         self.cache = _splice(self.cache, single, slots,
-                             rows=range(len(group)))
-        logits_np = np.asarray(logits)
+                             rows=range(len(group)),
+                             axes=self._cache_axes())
         for j, (req, slot) in enumerate(zip(group, slots)):
-            self.slots[slot] = req
-            self._rngs[slot] = self.sampler.stream(req.rid)
-            if plan.mode == "chunk" and P < len(req.prompt):
-                # chunked prefill: the rest of the prompt rides the
-                # decode step as forced inputs; prefill logits unused.
-                self.last_tokens[slot] = int(req.prompt[P])
-                self._tails[slot] = [int(t) for t in req.prompt[P + 1:]]
-            else:
-                self._tails[slot] = []
-                self._emit(slot, logits_np[j])
+            self._finish_admit(req, slot, plan, logits_np[j])
+
+    def _finish_admit(self, req: Request, slot: int, plan: AdmissionPlan,
+                      logits_row: Optional[np.ndarray],
+                      start_pos: Optional[int] = None):
+        """Per-slot bookkeeping shared by every admission path: seed the
+        sampler stream, arm the chunked-prefill tail (or emit the first
+        token), record the host-side context length."""
+        P = plan.prefill_len
+        self.slots[slot] = req
+        self._rngs[slot] = self.sampler.stream(req.rid)
+        if start_pos is None:
+            start_pos = len(req.prompt) if plan.mode == "pad" else P
+        self._host_pos[slot] = start_pos
+        if start_pos < len(req.prompt):
+            # chunked prefill: the rest of the prompt rides the
+            # decode step as forced inputs; prefill logits unused.
+            self.last_tokens[slot] = int(req.prompt[start_pos])
+            self._tails[slot] = [int(t)
+                                 for t in req.prompt[start_pos + 1:]]
+        else:
+            self._tails[slot] = []
+            self._emit(slot, logits_row)
 
     # ---------------------------------------------------------------- step
     def _emit(self, slot: int, logits_row: np.ndarray):
@@ -321,6 +397,7 @@ class ServeEngine:
             self.slots[slot] = None
             self._tails[slot] = []
             self._rngs[slot] = None
+            self._release_slot(slot)
 
     def step(self) -> int:
         """One engine iteration: admit new requests, decode one token
@@ -329,11 +406,15 @@ class ServeEngine:
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return 0
+        self.stats.live_token_steps += self._live_tokens(active)
+        self.stats.alloc_token_steps += self._allocated_tokens(active)
+        self.stats.max_active = max(self.stats.max_active, len(active))
         with self._ctx():
             self.cache, logits = self._step(
                 self.params, self.cache, jnp.asarray(self.last_tokens))
         logits_np = np.asarray(logits)
         for slot in active:
+            self._host_pos[slot] += 1
             if self._tails[slot]:
                 # chunked prefill tail: force the next prompt token
                 self.last_tokens[slot] = self._tails[slot].pop(0)

@@ -129,6 +129,21 @@ class Scheduler:
                     default=1)
         return AdmissionPlan("chunk", floor)
 
+    def pages_for(self, prompt_len: int, new_tokens: int,
+                  page_size: int) -> int:
+        """KV pages one request can ever hold, for page-budget admission.
+
+        Capped at the window (mirroring ``models.model._cache_window``):
+        a sliding-window cache wraps by design, so a request's live
+        pages never exceed ``ceil(W / page_size)`` no matter how long
+        the prompt — long prompts the window can serve must be admitted,
+        not rejected.
+        """
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        tokens = min(prompt_len + new_tokens, self.window)
+        return -(-tokens // page_size)
+
     def max_prefill_compiles(self, n_widths: int = 1) -> int:
         """Upper bound on distinct prefill compilations."""
         return len(self.prefill_lengths) * n_widths

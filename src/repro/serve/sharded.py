@@ -19,8 +19,9 @@ from typing import Optional
 
 from repro.dist.sharding import DECODE_RECIPE, Recipe, axis_rules, shard_tree
 from repro.launch.mesh import use_mesh
-from repro.models.model import CACHE_AXES, axes_tree
+from repro.models.model import axes_tree
 from repro.serve.engine import ServeEngine
+from repro.serve.paged import PagedServeEngine
 
 
 class ShardedServeEngine(ServeEngine):
@@ -33,11 +34,22 @@ class ShardedServeEngine(ServeEngine):
                                  mesh)
 
     def _place_cache(self, cache):
-        cache_axes = {k: CACHE_AXES[k] for k in cache}
-        return shard_tree(cache, cache_axes, self.recipe, self.mesh)
+        axes = self._cache_axes()
+        return shard_tree(cache, {k: axes[k] for k in cache},
+                          self.recipe, self.mesh)
 
     def _ctx(self):
         stack = ExitStack()
         stack.enter_context(use_mesh(self.mesh))
         stack.enter_context(axis_rules(self.recipe))
         return stack
+
+
+class ShardedPagedServeEngine(ShardedServeEngine, PagedServeEngine):
+    """Paged KV pool on a device mesh: the pooled ``kp``/``vp`` buffers
+    shard along ``kv_heads`` (tensor-parallel over ``model``, the same
+    placement the contiguous cache's head axis uses); page tables and
+    position counters replicate. Cooperative ``__init__`` chain —
+    placement from :class:`ShardedServeEngine`, paging from
+    :class:`PagedServeEngine` — everything else inherited."""
+

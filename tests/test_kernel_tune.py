@@ -55,10 +55,19 @@ def test_cases_derive_from_workload_ops():
     ops = {c.op for c in cases_for_cell(pset.arch("minicpm-2b"),
                                         pset.shape("prefill_32k"))}
     assert ops == {"prefill_attention", "rmsnorm"}
-    # decode: split-KV attention instead of prefill attention
-    ops = {c.op for c in cases_for_cell(pset.arch("minicpm-2b"),
-                                        pset.shape("decode_32k"))}
-    assert ops == {"decode_attention", "rmsnorm"}
+    # decode: split-KV attention (contiguous + its paged twin) instead
+    # of prefill attention
+    dec = cases_for_cell(pset.arch("minicpm-2b"), pset.shape("decode_32k"),
+                         page_sizes=pset.paged_page_sizes)
+    ops = {c.op for c in dec}
+    assert ops == {"decode_attention", "paged_decode_attention", "rmsnorm"}
+    # one paged case per preset page size, pool sized batch*pages + null
+    paged = [c for c in dec if c.op == "paged_decode_attention"]
+    assert sorted(c.case["page_size"] for c in paged) == \
+        sorted(pset.paged_page_sizes)
+    for c in paged:
+        npp = -(-c.case["W"] // c.case["page_size"])
+        assert c.case["n_pages"] == c.case["B"] * npp + 1
     # ssm: the scan op, and no attention case at all
     ops = {c.op for c in cases_for_cell(pset.arch("mamba2-1.3b"),
                                         pset.shape("prefill_32k"))}

@@ -167,3 +167,46 @@ def test_sharded_serve_engine_token_parity():
                                               eng.cache["k"].shape)
     print("sharded serve OK")
     """)
+
+
+def test_sharded_paged_serve_engine_token_parity():
+    """ShardedPagedServeEngine (pooled kp/vp sharded along kv_heads,
+    page tables replicated) serves token-for-token the same output as
+    the single-device paged engine, prefix cache on."""
+    _run("""
+    import numpy as np, jax
+    from repro.configs import ARCHS, smoke_config
+    from repro.launch.mesh import make_mesh
+    from repro.models import init_params
+    from repro.models.model import ModelRuntime
+    from repro.serve import (PagedServeEngine, Request,
+                             ShardedPagedServeEngine)
+
+    cfg = smoke_config(ARCHS["minicpm-2b"])
+    rt = ModelRuntime(dtype="float32", remat="none", attn_chunk=16)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 16)
+    prompts = [np.concatenate([sys_prompt,
+                               rng.integers(0, cfg.vocab_size, 3 + i)])
+               .astype(np.int32) for i in range(6)]
+
+    def serve(eng):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        return {r.rid: r.out_tokens for r in eng.run()}
+
+    want = serve(PagedServeEngine(params, cfg, rt, n_slots=4,
+                                  max_len=64, page_size=8))
+    mesh = make_mesh((2, 4), ("data", "model"))
+    eng = ShardedPagedServeEngine(params, cfg, rt, mesh, n_slots=4,
+                                  max_len=64, page_size=8)
+    got = serve(eng)
+    assert got == want, (got, want)
+    assert eng.stats.prefix_hits > 0
+    # the pooled KV pages really shard along kv_heads
+    shard = eng.cache["kp"].addressable_shards[0].data
+    assert shard.size < eng.cache["kp"].size, (shard.shape,
+                                               eng.cache["kp"].shape)
+    print("sharded paged serve OK")
+    """)
