@@ -1,0 +1,29 @@
+"""Benchmark entry: the ci-preset static-analysis run as a tracked
+smoke check.
+
+Running the analyzer inside the benchmark roster does two things the CI
+job alone can't: the pass/finding counts land in
+``artifacts/bench/results.json`` next to every other tracked metric (a
+creeping warning count is a perf-trajectory signal too), and the wall
+time of the analysis itself is measured — the sanitizer staying
+seconds-fast is what keeps it a blocking job.
+"""
+from __future__ import annotations
+
+
+def run(preset: str = "ci") -> dict:
+    from repro.analysis import run_analysis
+
+    report = run_analysis(preset)
+    counts = report.counts()
+    return {
+        "pass": report.ok(strict=True),
+        "preset": preset,
+        "passes": len(report.passes),
+        "findings": len(report.findings),
+        "errors": counts["error"],
+        "warnings": counts["warning"],
+        "info": counts["info"],
+        "by_rule": report.by_rule(),
+        "pass_seconds": {n: p["seconds"] for n, p in report.passes.items()},
+    }

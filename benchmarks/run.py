@@ -47,6 +47,9 @@ def build_benches(quick: bool = False) -> list:
         # calibration.json (repro.kernels.tune); raises with the
         # generation command when none exists
         ("kernel_model_error", "kernel_model_error", "run", (), {}),
+        # static-analysis smoke: ci-preset passes over the live tree;
+        # pass/finding counts tracked like every other metric
+        ("analysis", "analysis_smoke", "run", (), {}),
     ]
 
 

@@ -1,0 +1,20 @@
+"""Static-analysis subsystem: catch kernel races, recompile hazards,
+host-sync stalls and contract violations *before* anything runs.
+
+    PYTHONPATH=src python -m repro.analysis --preset ci --strict
+
+Four pass families (see README §Static analysis): the Pallas kernel
+validator, the jaxpr hot-path lint, the cross-module contract checker,
+and the shipped-bug-class AST lint. Findings serialize to
+``artifacts/analysis/report.json``.
+"""
+from repro.analysis.findings import (Finding, Location, Report,
+                                     apply_suppressions, parse_suppressions)
+from repro.analysis.registry import PRESETS, RULES, AnalysisContext
+from repro.analysis.runner import run_analysis
+
+__all__ = [
+    "Finding", "Location", "Report", "apply_suppressions",
+    "parse_suppressions", "PRESETS", "RULES", "AnalysisContext",
+    "run_analysis",
+]

@@ -1,0 +1,63 @@
+"""CLI: ``python -m repro.analysis --preset ci|full [--rules ...]
+[--strict]``.
+
+Exit code 0 when no ``error`` findings (and no ``warning`` under
+``--strict``); 1 otherwise. The report always lands at
+``artifacts/analysis/report.json`` (``--out`` overrides), including on
+failure — CI uploads it either way.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.registry import PRESETS, RULES
+from repro.analysis.runner import run_analysis
+from repro.artifacts import analysis_report_path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.analysis",
+                                 description=__doc__.split("\n")[0])
+    ap.add_argument("--preset", default="ci", choices=sorted(PRESETS),
+                    help="analysis scale: " + "; ".join(
+                        f"{n}: {p.description}" for n, p in
+                        sorted(PRESETS.items())))
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids; passes emitting none "
+                         "of them are skipped entirely")
+    ap.add_argument("--strict", action="store_true",
+                    help="warnings also fail the run")
+    ap.add_argument("--out", default=None,
+                    help=f"report path (default {analysis_report_path()})")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, desc in sorted(RULES.items()):
+            print(f"{rid:28s} {desc}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    try:
+        report = run_analysis(args.preset, rules=rules)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    path = report.write(args.out or analysis_report_path())
+    counts = report.counts()
+    for f in report.findings:
+        print(f.describe(), file=sys.stderr)
+    print(f"[analysis/{args.preset}] {len(report.findings)} findings "
+          f"({counts['error']} errors, {counts['warning']} warnings, "
+          f"{counts['info']} info) across {len(report.passes)} passes "
+          f"-> {path}")
+    return report.exit_code(strict=args.strict)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

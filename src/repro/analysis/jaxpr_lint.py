@@ -1,0 +1,261 @@
+"""jaxpr hot-path lint: trace the serving hot paths, execute nothing.
+
+Everything here runs on ``jax.make_jaxpr`` / ``jax.eval_shape`` over
+abstract params and caches (``abstract_params`` / ``abstract_cache``) —
+no weights materialize, no step executes. Per arch in the preset:
+
+* **trace stability** (``jaxpr-trace-unstable``) — (a) the decode step's
+  output cache avals must equal its input avals (otherwise *every* step
+  retraces: the classic silent recompile treadmill), and (b) re-tracing
+  the identical signature must reproduce the identical jaxpr.
+* **compile-count prediction** (``jaxpr-compile-count``) —
+  :func:`predict_prefill_compiles` replays the scheduler's ``plan()``
+  over every prompt length and counts distinct ``(prefill_len, width)``
+  pairs, the exact key the ServeEngine's trace counter uses; the
+  prediction must stay within ``Scheduler.max_prefill_compiles()``.
+  ``tests/test_serve_scheduler.py`` pins the prediction to the measured
+  counter for the same configs.
+* **host-sync hazards** (``jaxpr-host-sync``) — callback / debug-print /
+  infeed primitives anywhere in a hot-path jaxpr stall the device on
+  the host every step.
+* **dtype hygiene** (``jaxpr-dtype-widen``) — no f64/c128 value anywhere
+  in a hot path, decode logits in the runtime dtype, and the new cache
+  exactly matching the declared ``cache_spec`` dtypes (an f32-widened
+  bf16 KV cache doubles serving HBM silently). f32 ``dot_general``s
+  under a bf16 runtime are reported at *info* severity only
+  (``jaxpr-wide-dot``): softmax/SSM-state upcasts are intended, but the
+  count is worth eyeballing when it moves.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Sequence, Tuple
+
+from repro.analysis.findings import Finding, Location
+from repro.analysis.registry import AnalysisContext, register_pass
+
+#: Primitive-name substrings that imply a device->host round trip.
+HOST_SYNC_PRIMITIVES = ("callback", "debug_print", "infeed", "outfeed",
+                        "outside_call", "io_callback")
+
+
+# ===========================================================================
+# Compile-count prediction (pure scheduler replay — no tracing at all)
+# ===========================================================================
+def predict_prefill_compiles(scheduler, prompt_lens: Iterable[int],
+                             widths: Sequence[int] = (1,)) -> int:
+    """Distinct prefill compilations serving ``prompt_lens`` costs.
+
+    The ServeEngine's trace counter keys on the prefill call signature
+    ``(prefill_len, width)``; this replays ``Scheduler.plan`` over the
+    same lengths and counts the distinct keys — the static twin of the
+    measured counter, equal to it by construction (pinned by test).
+    """
+    keys = set()
+    for n in prompt_lens:
+        plan = scheduler.plan(int(n))
+        for w in widths:
+            keys.add((plan.prefill_len, int(w)))
+    return len(keys)
+
+
+# ===========================================================================
+# jaxpr scanning
+# ===========================================================================
+def _walk_eqns(jaxpr) -> Iterable[Any]:
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _walk_eqns(sub)
+
+
+def _subjaxprs(v) -> Iterable[Any]:
+    # duck-typed (Jaxpr has .eqns, ClosedJaxpr wraps one in .jaxpr):
+    # the class homes moved across jax releases, the attributes did not
+    if hasattr(v, "eqns"):
+        yield v
+    elif hasattr(v, "jaxpr"):
+        yield v.jaxpr
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _subjaxprs(x)
+
+
+def scan_jaxpr(closed, *, label: str, rt_dtype: str) -> List[Finding]:
+    """Host-sync + f64 + wide-dot scan of one hot-path jaxpr."""
+    import jax.numpy as jnp
+
+    findings: List[Finding] = []
+    sync_hits: Dict[str, int] = {}
+    wide64: Dict[str, int] = {}
+    f32_dots = 0
+    for eqn in _walk_eqns(closed.jaxpr):
+        name = eqn.primitive.name
+        if any(s in name for s in HOST_SYNC_PRIMITIVES):
+            sync_hits[name] = sync_hits.get(name, 0) + 1
+        for var in eqn.outvars:
+            dt = getattr(var.aval, "dtype", None)
+            if dt is not None and dt in (jnp.float64, jnp.complex128):
+                wide64[name] = wide64.get(name, 0) + 1
+        if name == "dot_general" and jnp.dtype(rt_dtype) == jnp.bfloat16:
+            dt = getattr(eqn.outvars[0].aval, "dtype", None)
+            if dt == jnp.float32:
+                f32_dots += 1
+    for name, n in sorted(sync_hits.items()):
+        findings.append(Finding(
+            "jaxpr-host-sync", "error", Location(symbol=label),
+            f"{n}x host-sync primitive {name!r} inside the hot path — "
+            f"the device stalls on the host every step",
+            "move the callback out of the stepped function"))
+    for name, n in sorted(wide64.items()):
+        findings.append(Finding(
+            "jaxpr-dtype-widen", "error", Location(symbol=label),
+            f"{n}x f64/c128 value produced by {name!r} in the hot path "
+            f"(TPUs emulate f64; something upcast past the runtime dtype)",
+            "audit the literal/np-scalar that promoted to 64-bit"))
+    if f32_dots:
+        findings.append(Finding(
+            "jaxpr-wide-dot", "info", Location(symbol=label),
+            f"{f32_dots} f32 dot_generals under a {rt_dtype} runtime "
+            f"(softmax/SSM-state upcasts are intended; watch this count)"))
+    return findings
+
+
+def _aval_map(tree) -> Dict[str, Tuple[Tuple, str]]:
+    import jax
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out[jax.tree_util.keystr(path)] = (tuple(leaf.shape),
+                                           str(leaf.dtype))
+    return out
+
+
+def check_cache_stable(in_cache, out_cache, *, label: str) -> List[Finding]:
+    """Decode must hand back a cache with identical avals — anything
+    else retraces every single step."""
+    got, want = _aval_map(out_cache), _aval_map(in_cache)
+    findings = []
+    for key in sorted(set(got) | set(want)):
+        if got.get(key) != want.get(key):
+            findings.append(Finding(
+                "jaxpr-trace-unstable", "error",
+                Location(symbol=f"{label}{key}"),
+                f"cache leaf changes aval across a step: "
+                f"{want.get(key)} -> {got.get(key)} — every decode step "
+                f"recompiles",
+                "return the cache at exactly the input shapes/dtypes"))
+    return findings
+
+
+# ===========================================================================
+# Per-arch lint
+# ===========================================================================
+def lint_arch(arch: str, *, max_len: int, page_size: int,
+              batch: int = 2) -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, smoke_config
+    from repro.models.model import (ModelRuntime, _cache_window,
+                                    abstract_cache, abstract_params,
+                                    decode_step, decode_step_paged,
+                                    page_count, paged_cache_spec, prefill)
+    from repro.serve.scheduler import Scheduler
+
+    cfg = smoke_config(get_arch(arch))
+    rt = ModelRuntime(dtype="bfloat16", remat="none", attn_chunk=16,
+                      moe_dropless=True)
+    params = abstract_params(cfg, dtype=rt.dtype)
+    cache = abstract_cache(cfg, batch, max_len, rt.dtype)
+    tokens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    findings: List[Finding] = []
+
+    def check_decode(fn, in_cache, label):
+        try:
+            closed = jax.make_jaxpr(fn)(params, in_cache, tokens)
+            new_cache, logits = jax.eval_shape(fn, params, in_cache, tokens)
+        except Exception as e:
+            findings.append(Finding(
+                "jaxpr-trace-unstable", "error", Location(symbol=label),
+                f"hot path fails to abstract-trace: "
+                f"{type(e).__name__}: {e}"))
+            return
+        findings.extend(scan_jaxpr(closed, label=label, rt_dtype=rt.dtype))
+        findings.extend(check_cache_stable(in_cache, new_cache, label=label))
+        if str(logits.dtype) != rt.dtype:
+            findings.append(Finding(
+                "jaxpr-dtype-widen", "error", Location(symbol=label),
+                f"decode logits are {logits.dtype}, runtime dtype is "
+                f"{rt.dtype} — the unembed upcast leaks out of the step"))
+        if str(jax.make_jaxpr(fn)(params, in_cache, tokens)) != str(closed):
+            findings.append(Finding(
+                "jaxpr-trace-unstable", "error", Location(symbol=label),
+                "re-tracing the identical signature yields a different "
+                "jaxpr — a nondeterministic trace retraces in production",
+                "remove trace-time randomness/id-dependence from the step"))
+
+    check_decode(lambda p, c, t: decode_step(p, cfg, c, t, rt), cache,
+                 f"decode_step/{arch}")
+    if cfg.family != "ssm":
+        W = _cache_window(cfg, max_len)
+        npp = page_count(W, page_size)
+        pspec = paged_cache_spec(cfg, batch, batch * npp + 1, page_size,
+                                 max_len)
+        pcache = {k: jax.ShapeDtypeStruct(s, jnp.dtype(d))
+                  for k, (s, d) in pspec.items()}
+        # KV pool in the runtime dtype, like the live engine allocates it
+        pcache = {k: (jax.ShapeDtypeStruct(v.shape, jnp.dtype(rt.dtype))
+                      if k in ("kp", "vp") else v)
+                  for k, v in pcache.items()}
+        check_decode(
+            lambda p, c, t: decode_step_paged(
+                p, cfg, c, t, rt, page_size=page_size, window=W),
+            pcache, f"decode_step_paged/{arch}")
+
+    # -- prefill per scheduler bucket ---------------------------------------
+    sched = Scheduler(cfg, max_len)
+    for L in sched.prefill_lengths:
+        label = f"prefill/{arch}@L{L}"
+        batch_in = {"tokens": jax.ShapeDtypeStruct((batch, L), jnp.int32)}
+        lengths = (jax.ShapeDtypeStruct((batch,), jnp.int32)
+                   if sched.pad_safe else None)
+        try:
+            closed = jax.make_jaxpr(
+                lambda p, b, lens: prefill(p, cfg, b, max_len, rt,
+                                           lengths=lens))(
+                params, batch_in, lengths)
+        except Exception as e:
+            findings.append(Finding(
+                "jaxpr-trace-unstable", "error", Location(symbol=label),
+                f"bucketed prefill fails to abstract-trace: "
+                f"{type(e).__name__}: {e}"))
+            continue
+        findings.extend(scan_jaxpr(closed, label=label, rt_dtype=rt.dtype))
+
+    # -- compile-count bound -------------------------------------------------
+    predicted = predict_prefill_compiles(sched, range(1, max_len + 1))
+    bound = sched.max_prefill_compiles()
+    if predicted > bound:
+        findings.append(Finding(
+            "jaxpr-compile-count", "error",
+            Location(symbol=f"scheduler/{arch}"),
+            f"serving every prompt length 1..{max_len} implies "
+            f"{predicted} prefill compiles, above the scheduler's own "
+            f"bound {bound} — plan() emits lengths outside "
+            f"prefill_lengths",
+            "make plan() land every prompt on a declared prefill length"))
+    return findings
+
+
+@register_pass(
+    "jaxpr_lint",
+    rules=("jaxpr-compile-count", "jaxpr-trace-unstable", "jaxpr-host-sync",
+           "jaxpr-dtype-widen", "jaxpr-wide-dot"),
+    description="abstract-trace decode/paged-decode/bucketed-prefill; "
+                "stability, compile-count, host-sync and dtype lint")
+def run_pass(ctx: AnalysisContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for arch in ctx.preset.jaxpr_archs:
+        findings.extend(lint_arch(arch, max_len=ctx.preset.max_len,
+                                  page_size=ctx.preset.page_size))
+    return findings

@@ -1,0 +1,135 @@
+"""Pass registry + analysis presets.
+
+An :class:`AnalysisPass` is a named callable ``run(ctx) -> [Finding]``
+declaring which rule ids it can emit — the runner uses the declaration
+to skip passes entirely when ``--rules`` filters them out (the CI
+AST-lint step runs in milliseconds because the kernel/jaxpr passes
+never even import jax that way).
+
+Presets mirror the rest of the repo: ``ci`` sweeps the smoke-scale
+tune grids and the two cheap hot-path archs; ``full`` covers the
+paper-scale grids and every family. Both share the physical per-core
+VMEM budget — block sizes either fit the hardware or they don't.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+
+# ---------------------------------------------------------------------------
+# Rule catalog (id -> one-line description), the single source for
+# --list-rules and the README table.
+# ---------------------------------------------------------------------------
+RULES: Dict[str, str] = {
+    # (1) Pallas kernel validator
+    "kernel-grid-coverage": "grid x out BlockSpec index maps must cover "
+                            "every output block",
+    "kernel-write-race": "two grid cells map to one output block without "
+                         "declared accumulation (scratch carry or "
+                         "output-ref read-modify-write)",
+    "kernel-vmem-budget": "double-buffered per-block VMEM footprint "
+                          "exceeds the per-core budget",
+    "kernel-missing-vjp": "non-xla impl is not differentiable: no "
+                          "custom_vjp and no xla reference to borrow "
+                          "a backward pass from",
+    "kernel-dtype-parity": "impl output shapes/dtypes disagree with the "
+                           "xla reference",
+    "kernel-trace-error": "impl fails to abstract-trace at a tune-grid "
+                          "shape",
+    # (2) jaxpr hot-path lint
+    "jaxpr-compile-count": "predicted prefill compile count exceeds "
+                           "Scheduler.max_prefill_compiles()",
+    "jaxpr-trace-unstable": "re-tracing an identical hot-path shape "
+                            "yields a different jaxpr (recompile hazard)",
+    "jaxpr-host-sync": "callback/debug_print/infeed primitive inside a "
+                       "hot path (device-host sync stall)",
+    "jaxpr-dtype-widen": "f64 value, or an output/cache dtype widened "
+                         "past its declared spec, inside a hot path",
+    "jaxpr-wide-dot": "informational: f32 dot_generals under a bf16 "
+                      "runtime (intended softmax/state upcasts included)",
+    # (3) contract checker
+    "contract-cache-axes": "cache leaf missing from (or rank-mismatched "
+                           "with) CACHE_AXES/PAGED_CACHE_AXES",
+    "contract-axis-unresolvable": "logical axis name resolves against no "
+                                  "sharding recipe (silent replication)",
+    "contract-dispatch-ref": "dispatch op without an xla reference impl",
+    "contract-tune-grid": "registered impl absent from a tune preset's "
+                          "block-size grids (never swept/calibrated)",
+    "contract-calib-kind": "dispatch op missing from "
+                           "MeasuredModel.CALIB_OP_KIND",
+    # (4) repo AST lint (shipped bug classes)
+    "ast-salted-hash": "builtin hash() on a persisted/cross-process key "
+                       "(PYTHONHASHSEED makes it per-process)",
+    "ast-env-mutation": "import-time os.environ/XLA_FLAGS mutation "
+                        "outside a __main__ guard",
+    "ast-axis-shape-guess": "axis identified by .shape[i] == comparison "
+                            "(collides as soon as two dims agree)",
+    # infrastructure
+    "analysis-suppression": "ignore[...] comment without a justification",
+    "analysis-pass-error": "an analysis pass itself crashed",
+}
+
+
+@dataclass(frozen=True)
+class AnalysisPreset:
+    """Scale point of one analysis run."""
+
+    name: str
+    tune_preset: str                     # kernels swept at this grid
+    jaxpr_archs: Tuple[str, ...]         # hot paths traced (smoke configs)
+    max_len: int = 64                    # scheduler/cache ceiling traced
+    page_size: int = 8
+    vmem_budget_bytes: int = 16 * 1024 * 1024   # per-core VMEM
+    description: str = ""
+
+
+PRESETS: Dict[str, AnalysisPreset] = {
+    "ci": AnalysisPreset(
+        name="ci", tune_preset="ci",
+        jaxpr_archs=("minicpm-2b", "mamba2-1.3b"),
+        description="smoke tune grids + dense/SSM hot paths (seconds)"),
+    "full": AnalysisPreset(
+        name="full", tune_preset="full",
+        jaxpr_archs=("minicpm-2b", "mamba2-1.3b", "zamba2-2.7b",
+                     "qwen2-moe-a2.7b", "mixtral-8x22b"),
+        description="paper-scale tune grids + every cache family"),
+}
+
+
+@dataclass
+class AnalysisContext:
+    """Everything a pass needs: the preset + the tree root to lint."""
+
+    preset: AnalysisPreset
+    root: str
+
+
+@dataclass(frozen=True)
+class AnalysisPass:
+    name: str
+    rules: Tuple[str, ...]
+    run: Callable[[AnalysisContext], List[Finding]]
+    description: str = ""
+
+
+_PASSES: Dict[str, AnalysisPass] = {}
+
+
+def register_pass(name: str, rules: Tuple[str, ...], description: str = ""):
+    """Decorator: register ``fn(ctx) -> [Finding]`` under ``name``."""
+    unknown = [r for r in rules if r not in RULES]
+    if unknown:
+        raise KeyError(f"pass {name!r} declares unknown rules {unknown}; "
+                       f"add them to registry.RULES")
+
+    def deco(fn):
+        _PASSES[name] = AnalysisPass(name, tuple(rules), fn, description)
+        return fn
+
+    return deco
+
+
+def all_passes() -> Dict[str, AnalysisPass]:
+    return dict(_PASSES)

@@ -1,0 +1,85 @@
+"""Analysis driver: select passes, run them, assemble the report.
+
+Passes self-register at import time (the same pattern as the kernel
+dispatch table), so the runner imports the pass modules lazily and only
+the ones whose declared rules survive the ``--rules`` filter — the CI
+AST-lint invocation never imports jax this way.
+
+A pass that *crashes* is itself a finding (``analysis-pass-error``,
+severity error): an analyzer that silently skips a broken pass is
+strictly worse than no analyzer.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+from repro.analysis.findings import Finding, Location, Report
+from repro.analysis.registry import PRESETS, RULES, AnalysisContext, all_passes
+
+#: Pass modules, imported on demand (each registers itself).
+_PASS_MODULES = (
+    "repro.analysis.ast_lint",
+    "repro.analysis.contracts",
+    "repro.analysis.kernel_validator",
+    "repro.analysis.jaxpr_lint",
+)
+
+
+def _load_passes():
+    import importlib
+    for mod in _PASS_MODULES:
+        importlib.import_module(mod)
+    return all_passes()
+
+
+def run_analysis(preset: str = "ci",
+                 rules: Optional[Sequence[str]] = None,
+                 root: Optional[str] = None) -> Report:
+    """Run every pass whose rules intersect ``rules`` (None = all)."""
+    if preset not in PRESETS:
+        raise KeyError(f"unknown analysis preset {preset!r}; "
+                       f"available: {sorted(PRESETS)}")
+    if rules:
+        unknown = [r for r in rules if r not in RULES]
+        if unknown:
+            raise KeyError(f"unknown rule ids {unknown}; "
+                           f"see --list-rules")
+    selected = set(rules) if rules else None
+
+    if root is None:
+        import os
+
+        import repro
+        # repro is a namespace package (no __init__.py): resolve the
+        # repo root from its package path, src/repro -> <root>
+        pkg_dir = os.path.abspath(list(repro.__path__)[0])
+        root = os.path.dirname(os.path.dirname(pkg_dir))
+
+    ctx = AnalysisContext(preset=PRESETS[preset], root=root)
+    report = Report(preset=preset,
+                    rules=sorted(selected) if selected else None)
+    for name, ps in sorted(_load_passes().items()):
+        if selected is not None and not selected.intersection(ps.rules):
+            continue
+        t0 = time.time()
+        try:
+            found: List[Finding] = list(ps.run(ctx))
+        except Exception as e:
+            found = [Finding(
+                "analysis-pass-error", "error", Location(symbol=name),
+                f"pass crashed: {type(e).__name__}: {e}",
+                "fix the pass — a skipped sanitizer is a false all-clear")]
+        if selected is not None:
+            # a crashed pass must never be filtered into silence — a
+            # skipped sanitizer reads as a false all-clear
+            found = [f for f in found
+                     if f.rule_id in selected
+                     or f.rule_id == "analysis-pass-error"]
+        report.findings.extend(found)
+        report.passes[name] = {
+            "rules": list(ps.rules),
+            "findings": len(found),
+            "seconds": round(time.time() - t0, 3),
+        }
+    return report

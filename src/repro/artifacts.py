@@ -12,6 +12,7 @@ under installed-package layouts where ``repro`` lives in
     <root>/bench/<name>.json                              benchmark outputs
     <root>/perf/...                                       §Perf hillclimb variants
     <root>/kernels/calibration.json                       kernel autotuner output
+    <root>/analysis/report.json                           static-analysis findings
 
 ``<root>`` is ``$REPRO_ARTIFACT_DIR`` when set, else ``./artifacts``
 relative to the current working directory (the repo checkout root in
@@ -55,6 +56,17 @@ def calibration_path() -> str:
     """The microbenchmark calibration table the measured accelerator
     model (``repro.core.analytical.measured``) evaluates workloads from."""
     return os.path.join(kernels_dir(), "calibration.json")
+
+
+def analysis_dir() -> str:
+    """Static-analysis artifacts (``repro.analysis``)."""
+    return os.path.join(artifact_root(), "analysis")
+
+
+def analysis_report_path() -> str:
+    """The findings report ``python -m repro.analysis`` writes (the
+    blocking-CI artifact)."""
+    return os.path.join(analysis_dir(), "report.json")
 
 
 def pp_dir() -> str:

@@ -53,6 +53,13 @@ _COMMON: Dict[str, AxisEntry] = {
     "tokens": ("pod", "data"),
     "seq": None,
     "q_seq": None,
+    # KV-cache sequence rows stay replicated across the mesh: decode
+    # gathers them per step, and splitting them would turn every step
+    # into a collective. Declared (rather than absent) so the contract
+    # checker can tell replicate-by-design from nobody-decided —
+    # Recipe.spec_for silently replicates unknown names
+    # (contract-axis-unresolvable).
+    "kv_seq": None,
     "head_dim": None,
     "capacity": None,
     "layers": None,

@@ -37,6 +37,7 @@ path is actually taken.
 from __future__ import annotations
 
 import functools
+import os
 from dataclasses import dataclass, replace
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -144,12 +145,48 @@ def resolve_policy(policy: Optional[KernelPolicy]) -> KernelPolicy:
 _TABLE: Dict[str, Dict[str, Callable]] = {op: {} for op in KERNEL_OPS}
 
 
-def register_impl(op: str, impl: str) -> Callable[[Callable], Callable]:
-    """Decorator: register ``fn`` as implementation ``impl`` of ``op``."""
+class KernelValidationError(ValueError):
+    """An implementation failed the static kernel validator at
+    registration time; the message carries the findings verbatim."""
+
+
+def _validate_on_register() -> bool:
+    """Opt-out flag, read at registration time so tests can flip it."""
+    return os.environ.get("REPRO_VALIDATE_KERNELS", "1") != "0"
+
+
+def register_impl(op: str, impl: str,
+                  example: Optional[Callable] = None,
+                  validate: Optional[bool] = None,
+                  ) -> Callable[[Callable], Callable]:
+    """Decorator: register ``fn`` as implementation ``impl`` of ``op``.
+
+    ``example`` opts the implementation into registration-time static
+    validation (``repro.analysis.kernel_validator``): a no-arg callable
+    returning ``(avals, kwargs)`` — operand ShapeDtypeStructs plus
+    call-site kwargs — at which the impl is abstract-traced and its
+    grid/BlockSpec geometry checked. Error findings reject the
+    registration with a :class:`KernelValidationError` naming the rule,
+    instead of the op corrupting output at runtime. ``validate=False``
+    (or ``REPRO_VALIDATE_KERNELS=0``) opts out, for tests that seed
+    deliberately-broken impls.
+    """
     if op not in _TABLE:
         raise KeyError(f"unknown kernel op {op!r}; registered: {KERNEL_OPS}")
 
     def deco(fn: Callable) -> Callable:
+        run = _validate_on_register() if validate is None else validate
+        if run and example is not None and impl != "xla":
+            from repro.analysis.kernel_validator import validate_impl
+            avals, kwargs = example()
+            findings = validate_impl(op, impl, fn, avals, dict(kwargs),
+                                     ref=_TABLE[op].get("xla"),
+                                     label=f"{op}/{impl}@register")
+            errors = [f for f in findings if f.severity == "error"]
+            if errors:
+                raise KernelValidationError(
+                    f"refusing to register {op}/{impl}: "
+                    + "; ".join(f.describe() for f in errors))
         _TABLE[op][impl] = fn
         return fn
 

@@ -466,11 +466,36 @@ def aggregate_policy(entries: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
 # ===========================================================================
 def run_tuning(preset: TunePreset,
                cells: Optional[Sequence[Tuple[str, str]]] = None,
-               reps: Optional[int] = None) -> Dict[str, Any]:
+               reps: Optional[int] = None,
+               validate: bool = False) -> Dict[str, Any]:
     """Run the full sweep; returns the calibration payload (not yet
-    written)."""
+    written).
+
+    ``validate=True`` first runs the static kernel validator
+    (``repro.analysis.kernel_validator``) over the same cells x grids
+    about to be timed — a calibration that blesses a racy or
+    budget-busting block size is worse than none. Findings land in the
+    payload's ``validation`` block; error findings raise
+    :class:`~repro.kernels.dispatch.KernelValidationError` before any
+    timing runs. The CLI turns this on by default (``--no-validate``
+    opts out); library callers opt in.
+    """
     if reps is not None:
         preset = dataclasses.replace(preset, reps=reps)
+    validation: Optional[Dict[str, Any]] = None
+    if validate:
+        from repro.analysis.kernel_validator import validate_preset
+        from repro.kernels.dispatch import KernelValidationError
+        findings = validate_preset(preset, cells=cells)
+        for f in findings:
+            print(f"[tune/{preset.name}] {f.describe()}", file=sys.stderr)
+        errors = [f for f in findings if f.severity == "error"]
+        validation = {"findings": len(findings), "errors": len(errors),
+                      "rules": sorted({f.rule_id for f in findings})}
+        if errors:
+            raise KernelValidationError(
+                f"{len(errors)} kernel-validator errors over the "
+                f"{preset.name} grid; not timing broken kernels")
     entries: List[Dict[str, Any]] = []
     for arch_name, shape_name in (cells or preset.cells):
         cfg = preset.arch(arch_name)
@@ -494,6 +519,7 @@ def run_tuning(preset: TunePreset,
         "cells": [list(c) for c in (cells or preset.cells)],
         "entries": entries,
         "policy": aggregate_policy(entries),
+        "validation": validation,
     }
 
 
@@ -519,6 +545,9 @@ def main(argv=None) -> int:
                     help="override timing repetitions")
     ap.add_argument("--out", default=None,
                     help=f"output path (default {calibration_path()})")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip the static kernel validator that runs "
+                         "before timing")
     args = ap.parse_args(argv)
 
     preset = TUNE_PRESETS[args.preset]
@@ -543,7 +572,13 @@ def main(argv=None) -> int:
                 return 2
             cells.append((arch, shape))
 
-    payload = run_tuning(preset, cells=cells, reps=args.reps)
+    from repro.kernels.dispatch import KernelValidationError
+    try:
+        payload = run_tuning(preset, cells=cells, reps=args.reps,
+                             validate=not args.no_validate)
+    except KernelValidationError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
     path = write_calibration(payload, args.out)
     pol = payload["policy"]
     print(f"\n[tune/{preset.name}] {len(payload['entries'])} entries -> "

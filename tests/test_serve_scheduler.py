@@ -120,6 +120,26 @@ def test_compile_count_bounded_chunk_mode():
         <= eng.scheduler.max_prefill_compiles() <= 6
 
 
+@pytest.mark.parametrize("arch,lengths", [
+    ("minicpm-2b", list(range(3, 17))),      # pad mode (rule: jaxpr-compile-count)
+    ("mamba2-1.3b", list(range(2, 14))),     # chunk mode (SSM)
+])
+def test_static_compile_prediction_matches_trace_counter(arch, lengths):
+    """The jaxpr lint's static compile-count prediction
+    (``repro.analysis.jaxpr_lint.predict_prefill_compiles``) must equal
+    the engine's measured trace counter for the same bucket configs —
+    the analyzer predicts without executing a single step."""
+    from repro.analysis.jaxpr_lint import predict_prefill_compiles
+
+    cfg = smoke_config(ARCHS[arch])
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng, done = _serve_lengths(cfg, params, lengths)
+    assert len(done) == len(lengths)
+    predicted = predict_prefill_compiles(eng.scheduler, lengths)
+    assert predicted == eng.stats.prefill_compiles
+    assert predicted <= eng.scheduler.max_prefill_compiles()
+
+
 # ------------------------------------------------------------ parity
 @pytest.mark.parametrize("arch", ["minicpm-2b",       # pad mode
                                   "mamba2-1.3b",      # chunk mode (SSM)
