@@ -26,4 +26,6 @@ def run(preset: str = "ci") -> dict:
         "info": counts["info"],
         "by_rule": report.by_rule(),
         "pass_seconds": {n: p["seconds"] for n, p in report.passes.items()},
+        "findings_by_pass": {n: p["findings"]
+                             for n, p in report.passes.items()},
     }

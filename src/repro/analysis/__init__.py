@@ -1,20 +1,31 @@
 """Static-analysis subsystem: catch kernel races, recompile hazards,
-host-sync stalls and contract violations *before* anything runs.
+host-sync stalls, contract violations — and, since the performance
+passes landed, oversized collectives, HBM overflows and silent
+replication — *before* anything runs.
 
     PYTHONPATH=src python -m repro.analysis --preset ci --strict
 
-Four pass families (see README §Static analysis): the Pallas kernel
+Seven pass families (see README §Static analysis): the Pallas kernel
 validator, the jaxpr hot-path lint, the cross-module contract checker,
-and the shipped-bug-class AST lint. Findings serialize to
-``artifacts/analysis/report.json``.
+the shipped-bug-class AST lint, the SPMD/collective lint over compiled
+HLO and dry-run artifacts, the jaxpr liveness walk + capacity drift
+guards, and the paper-scale sharding-propagation check. Findings
+serialize to ``artifacts/analysis/report.json``; the closed-form HBM
+model behind ``launch/serve.py --preflight`` lives in
+:mod:`repro.analysis.capacity`.
 """
+from repro.analysis.capacity import (CapacityReport, capacity,
+                                     serve_preflight)
 from repro.analysis.findings import (Finding, Location, Report,
-                                     apply_suppressions, parse_suppressions)
+                                     apply_suppressions, baseline_regressions,
+                                     gate_counts, load_baseline,
+                                     parse_suppressions)
 from repro.analysis.registry import PRESETS, RULES, AnalysisContext
 from repro.analysis.runner import run_analysis
 
 __all__ = [
     "Finding", "Location", "Report", "apply_suppressions",
     "parse_suppressions", "PRESETS", "RULES", "AnalysisContext",
-    "run_analysis",
+    "run_analysis", "capacity", "CapacityReport", "serve_preflight",
+    "gate_counts", "load_baseline", "baseline_regressions",
 ]

@@ -1,19 +1,24 @@
 """CLI: ``python -m repro.analysis --preset ci|full [--rules ...]
-[--strict]``.
+[--strict] [--baseline PATH]``.
 
 Exit code 0 when no ``error`` findings (and no ``warning`` under
-``--strict``); 1 otherwise. The report always lands at
-``artifacts/analysis/report.json`` (``--out`` overrides), including on
-failure — CI uploads it either way.
+``--strict``); 1 otherwise. With ``--baseline`` the gate is the *diff*
+instead: only rules whose error/warning count grew past the committed
+baseline fail the run — known debt doesn't re-fail every CI run, new
+debt can't hide behind it. The report always lands at
+``artifacts/analysis/report.json`` (``--output`` overrides), including
+on failure — CI uploads it either way.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
+from repro.analysis.findings import (baseline_regressions, gate_counts,
+                                     load_baseline)
 from repro.analysis.registry import PRESETS, RULES
 from repro.analysis.runner import run_analysis
-from repro.artifacts import analysis_report_path
+from repro.artifacts import analysis_baseline_path, analysis_report_path
 
 
 def main(argv=None) -> int:
@@ -28,8 +33,16 @@ def main(argv=None) -> int:
                          "of them are skipped entirely")
     ap.add_argument("--strict", action="store_true",
                     help="warnings also fail the run")
-    ap.add_argument("--out", default=None,
+    ap.add_argument("--output", "--out", dest="output", default=None,
                     help=f"report path (default {analysis_report_path()})")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="diff against this committed baseline: fail only "
+                         "on rules whose error/warning count grew "
+                         f"(the tracked one: {analysis_baseline_path()})")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    dest="write_baseline",
+                    help="also write the run's gate counts as a fresh "
+                         "baseline (how the committed file regenerates)")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalog and exit")
     args = ap.parse_args(argv)
@@ -42,13 +55,23 @@ def main(argv=None) -> int:
     rules = None
     if args.rules:
         rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    if rules is None or any(r.startswith("spmd-") for r in rules):
+        # spmd_lint compiles on a forced host mesh; the device count
+        # must hit XLA_FLAGS before any pass initializes the backend
+        # (a pass running first would pin it at 1 device and the HLO
+        # checks would degrade to a skip). Env mutation is safe here —
+        # the CLI owns its process — and deliberately NOT in
+        # run_analysis, which in-process callers (tests, benchmarks)
+        # must be able to use without leaking a device count
+        from repro.launch.presets import CI, request_host_devices
+        request_host_devices(CI.host_device_count())
     try:
         report = run_analysis(args.preset, rules=rules)
     except KeyError as e:
         print(f"error: {e.args[0]}", file=sys.stderr)
         return 2
 
-    path = report.write(args.out or analysis_report_path())
+    path = report.write(args.output or analysis_report_path())
     counts = report.counts()
     for f in report.findings:
         print(f.describe(), file=sys.stderr)
@@ -56,6 +79,26 @@ def main(argv=None) -> int:
           f"({counts['error']} errors, {counts['warning']} warnings, "
           f"{counts['info']} info) across {len(report.passes)} passes "
           f"-> {path}")
+
+    if args.write_baseline:
+        bpath = report.write_baseline(args.write_baseline)
+        print(f"[analysis/{args.preset}] baseline -> {bpath}")
+
+    if args.baseline:
+        try:
+            base = load_baseline(args.baseline)
+        except (OSError, ValueError) as e:
+            print(f"error: cannot read baseline {args.baseline!r}: {e}",
+                  file=sys.stderr)
+            return 2
+        regressions = baseline_regressions(
+            gate_counts(report.findings), base)
+        for r in regressions:
+            print(f"[regression vs baseline] {r}", file=sys.stderr)
+        print(f"[analysis/{args.preset}] baseline diff vs "
+              f"{args.baseline}: {len(regressions)} regressed rules")
+        return 1 if regressions else 0
+
     return report.exit_code(strict=args.strict)
 
 

@@ -129,6 +129,47 @@ def apply_suppressions(findings: List[Finding], source: str,
 
 
 # ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+BASELINE_VERSION = 1
+
+
+def gate_counts(findings: List["Finding"]) -> Dict[str, int]:
+    """Per-rule counts of the severities that gate an exit code
+    (error + warning; info never gates)."""
+    out: Dict[str, int] = {}
+    for f in findings:
+        if f.severity in ("error", "warning"):
+            out[f.rule_id] = out.get(f.rule_id, 0) + 1
+    return dict(sorted(out.items()))
+
+
+def load_baseline(path: str) -> Dict[str, int]:
+    """Rule -> gating-count map from a baseline file (or, tolerated,
+    a full ``report.json`` — its findings are re-counted)."""
+    with open(path) as f:
+        data = json.load(f)
+    if "gate_counts" in data:
+        return {str(k): int(v) for k, v in data["gate_counts"].items()}
+    out: Dict[str, int] = {}
+    for rec in data.get("findings", []):
+        if rec.get("severity") in ("error", "warning"):
+            out[rec["rule_id"]] = out.get(rec["rule_id"], 0) + 1
+    return dict(sorted(out.items()))
+
+
+def baseline_regressions(current: Dict[str, int],
+                         baseline: Dict[str, int]) -> List[str]:
+    """Rules whose gating-finding count grew past the baseline — the
+    only thing a baseline-diffed run fails on. Counts at or below the
+    baseline (including rules that vanished) pass: the gate is
+    ratchet-shaped, never absolute."""
+    return [f"{rule}: {baseline.get(rule, 0)} -> {n}"
+            for rule, n in sorted(current.items())
+            if n > baseline.get(rule, 0)]
+
+
+# ---------------------------------------------------------------------------
 # Report
 # ---------------------------------------------------------------------------
 REPORT_VERSION = 1
@@ -180,4 +221,20 @@ class Report:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with open(path, "w") as f:
             json.dump(self.to_json(), f, indent=1)
+        return path
+
+    def baseline_json(self) -> Dict[str, Any]:
+        """The committed-baseline form: rule -> gating counts only (no
+        timestamps, no messages — diffs stay reviewable)."""
+        return {
+            "version": BASELINE_VERSION,
+            "preset": self.preset,
+            "gate_counts": gate_counts(self.findings),
+        }
+
+    def write_baseline(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.baseline_json(), f, indent=1, sort_keys=True)
+            f.write("\n")
         return path

@@ -66,6 +66,36 @@ RULES: Dict[str, str] = {
                         "outside a __main__ guard",
     "ast-axis-shape-guess": "axis identified by .shape[i] == comparison "
                             "(collides as soon as two dims agree)",
+    # (5) SPMD / collective lint (compiled-HLO + dry-run artifacts)
+    "spmd-collective-oversize": "measured per-chip collective bytes "
+                                "exceed the analytic ring-model "
+                                "expectation by the preset slack factor",
+    "spmd-replicated-gather": "a single all-gather materializes a large "
+                              "fraction of the full parameter tree "
+                              "where the recipe implies sharded/"
+                              "reduce-scattered weights",
+    "spmd-reshard-thrash": "adjacent inverse collectives on one buffer "
+                           "(all-gather of a just-reduce-scattered "
+                           "value, or the reverse)",
+    "spmd-host-transfer": "host transfer (infeed/outfeed/host send-recv) "
+                          "inside a compiled step",
+    "spmd-memory-drift": "compiled memory_analysis() peak diverges from "
+                         "the closed-form capacity model",
+    "spmd-lowering-skipped": "informational: an HLO/artifact check was "
+                             "skipped (no forced host devices, or no "
+                             "dry-run artifacts generated)",
+    # (6) liveness / capacity
+    "capacity-hbm-overflow": "predicted per-device peak HBM exceeds the "
+                             "chip budget (the --preflight gate)",
+    "capacity-spec-drift": "the closed-form capacity model drifted from "
+                           "the live runtime/model contracts it mirrors",
+    # (7) sharding propagation
+    "shard-replicated-large": "a large parameter/cache leaf stays fully "
+                              "replicated on every device of the mesh",
+    "shard-spec-dropped": "sanitize_spec drops a requested mesh axis "
+                          "(indivisible extent: silent replication)",
+    "shard-unknown-mesh-axis": "a recipe rule names a mesh axis that "
+                               "exists in no preset mesh (dead spec)",
     # infrastructure
     "analysis-suppression": "ignore[...] comment without a justification",
     "analysis-pass-error": "an analysis pass itself crashed",
@@ -82,6 +112,12 @@ class AnalysisPreset:
     max_len: int = 64                    # scheduler/cache ceiling traced
     page_size: int = 8
     vmem_budget_bytes: int = 16 * 1024 * 1024   # per-core VMEM
+    # -- performance passes (spmd_lint / liveness / sharding_prop) ----------
+    dryrun_preset: str = "ci"            # artifact cells linted
+    collective_slack: float = 6.0        # measured/expected factor gate
+    memory_drift_tol: float = 0.25       # |peak - capacity| / peak gate
+    gather_param_frac: float = 0.5       # one gather vs full param bytes
+    replicated_leaf_bytes: int = 2 << 30  # replicated-leaf warning floor
     description: str = ""
 
 
@@ -94,6 +130,7 @@ PRESETS: Dict[str, AnalysisPreset] = {
         name="full", tune_preset="full",
         jaxpr_archs=("minicpm-2b", "mamba2-1.3b", "zamba2-2.7b",
                      "qwen2-moe-a2.7b", "mixtral-8x22b"),
+        dryrun_preset="full",
         description="paper-scale tune grids + every cache family"),
 }
 

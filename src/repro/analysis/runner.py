@@ -23,6 +23,9 @@ _PASS_MODULES = (
     "repro.analysis.contracts",
     "repro.analysis.kernel_validator",
     "repro.analysis.jaxpr_lint",
+    "repro.analysis.liveness",
+    "repro.analysis.sharding_prop",
+    "repro.analysis.spmd_lint",
 )
 
 

@@ -1,0 +1,218 @@
+"""Static sharding propagation: push every recipe's PartitionSpecs
+over the *paper-scale* parameter and cache trees on the production
+meshes — pure shape math, no devices, no tracing.
+
+The production path (``dist.sharding.param_sharding_tree`` →
+``sanitize_spec``) degrades infeasible shardings to replication by
+design. That is the right *runtime* behavior and the wrong *silent*
+behavior: a head count that stops dividing the model axis quietly
+replicates a multi-GiB tensor on all 256 devices and nothing fails
+until HBM does. This pass replays exactly the production propagation —
+same ``Recipe.spec_for``, same ``sanitize_spec``, reading the same
+drop recorder production writes — at full scale, where the ci-scale
+smoke tests can't see the divisibility failures:
+
+* ``shard-unknown-mesh-axis`` (error) — a recipe rule names a mesh
+  axis no preset mesh has: the spec is dead everywhere, pure config
+  rot.
+* ``shard-replicated-large`` (warning) — a parameter/cache leaf above
+  the preset's byte floor ends up fully replicated under a recipe that
+  was supposed to shard it.
+* ``shard-spec-dropped`` (info) — per (arch x mesh x step) cell:
+  how many requested axes ``sanitize_spec`` dropped for
+  *indivisibility*, with example leaves. Informational because the
+  degrade is often benign (a 3-way head count on a 16-way axis falls
+  back to the ``*_seq`` recipes upstream) — but the count moving in a
+  diff is exactly how the silent-replication bugs announce themselves.
+
+Cells mirror the dry-run census: every registered arch at paper scale,
+the ``full`` launch meshes (16x16 and 2x16x16), one representative
+shape per step kind, ``default_recipe`` choosing the recipe exactly as
+the launcher would, ``shape_skip_reason`` excluding the same cells.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+from repro.analysis.findings import Finding, Location
+from repro.analysis.registry import AnalysisContext, register_pass
+
+#: One shape per step kind, from the paper's grid.
+_KIND_SHAPES = {"train": "train_4k", "prefill": "prefill_32k",
+                "decode": "decode_32k"}
+
+
+# ===========================================================================
+# Recipe rule audit (mesh-independent)
+# ===========================================================================
+def known_mesh_axes() -> Tuple[str, ...]:
+    """Union of mesh axes over every launch preset."""
+    from repro.launch.presets import PRESETS
+
+    axes = []
+    for preset in PRESETS.values():
+        for spec in preset.meshes.values():
+            for ax in spec.axes:
+                if ax not in axes:
+                    axes.append(ax)
+    return tuple(axes)
+
+
+def find_unknown_axes() -> List[Finding]:
+    from repro.dist.sharding import RECIPES
+
+    known = set(known_mesh_axes())
+    findings = []
+    for rname, recipe in sorted(RECIPES.items()):
+        for logical, entry in sorted(recipe.rules.items()):
+            if entry is None:
+                continue
+            parts = (entry,) if isinstance(entry, str) else tuple(entry)
+            for ax in parts:
+                if ax is not None and ax not in known:
+                    findings.append(Finding(
+                        "shard-unknown-mesh-axis", "error",
+                        Location(symbol=f"recipe/{rname}/{logical}"),
+                        f"recipe {rname!r} maps logical axis "
+                        f"{logical!r} to mesh axis {ax!r}, which exists "
+                        f"in no preset mesh ({sorted(known)}) — the "
+                        f"spec silently replicates everywhere",
+                        "fix the axis name or add it to a preset mesh"))
+    return findings
+
+
+# ===========================================================================
+# Per-cell propagation
+# ===========================================================================
+def _leaf_iter(ab, axes):
+    """(path, shape, itemsize, logical_axes) per leaf of an abstract
+    tree, axes-tree aligned exactly as ``param_sharding_tree`` aligns
+    them."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist.sharding import _is_axes_leaf
+
+    path_leaves = jax.tree_util.tree_flatten_with_path(ab)[0]
+    ax_leaves = jax.tree_util.tree_flatten(axes, is_leaf=_is_axes_leaf)[0]
+    if len(path_leaves) != len(ax_leaves):
+        raise ValueError(f"abstract tree has {len(path_leaves)} leaves "
+                         f"but axes tree has {len(ax_leaves)}")
+    for (path, leaf), ax in zip(path_leaves, ax_leaves):
+        ax = ax or (None,) * len(leaf.shape)
+        yield (jax.tree_util.keystr(path), tuple(leaf.shape),
+               jnp.dtype(leaf.dtype).itemsize, ax)
+
+
+def _cell_trees(cfg, kind: str, shape):
+    """[(label, abstract, axes)] trees a step of ``kind`` places on
+    devices."""
+    from repro.analysis.capacity import (_abstract_cache_tree,
+                                         _abstract_paged_cache_tree)
+    from repro.models.model import (_cache_window, abstract_params,
+                                    axes_tree, page_count)
+
+    dtype = "float32" if kind == "train" else "bfloat16"
+    trees = [("params", abstract_params(cfg, dtype), axes_tree(cfg))]
+    if kind == "decode":
+        B = shape.global_batch
+        kv_len = shape.kv_len or shape.seq_len
+        ab, ax, _ = _abstract_cache_tree(cfg, B, kv_len)
+        trees.append(("cache", ab, ax))
+        if cfg.family != "ssm":
+            page_size = 64
+            W = _cache_window(cfg, kv_len)
+            pages = B * page_count(W, page_size) + 1
+            pab, pax, _ = _abstract_paged_cache_tree(
+                cfg, B, pages, page_size, kv_len)
+            trees.append(("paged_cache", pab, pax))
+    return trees
+
+
+def propagate_cell(cfg, mesh_name: str, sizes: Dict[str, int], kind: str,
+                   shape, *, replicated_floor: int,
+                   seen: set) -> List[Finding]:
+    """Propagate the cell's recipe over its trees; emit replicated-large
+    per oversized leaf and one spec-dropped rollup for the cell."""
+    from repro.analysis.capacity import _ProxyMesh
+    from repro.dist.sharding import (reset_spec_drops, sanitize_spec,
+                                     spec_drop_count, spec_drops)
+    from repro.launch.lowering import default_recipe
+
+    recipe = default_recipe(cfg, shape, sizes.get("model", 1))
+    mesh = _ProxyMesh(sizes)
+    devices = math.prod(sizes.values())
+    cell = f"{cfg.name}/{mesh_name}/{kind}"
+    findings: List[Finding] = []
+
+    reset_spec_drops()
+    for label, ab, axes in _cell_trees(cfg, kind, shape):
+        for path, shp, itemsize, ax in _leaf_iter(ab, axes):
+            spec = recipe.spec_for(ax)
+            kept = sanitize_spec(spec, shp, mesh, path=f"{label}{path}")
+            factor = 1
+            for e in tuple(kept):
+                if e is None:
+                    continue
+                for a in ((e,) if isinstance(e, str) else e):
+                    factor *= sizes[a]
+            leaf_bytes = math.prod(shp) * itemsize if shp else itemsize
+            wanted = any(e is not None for e in tuple(spec))
+            key = (cfg.name, mesh_name, recipe.name, label, path)
+            if (factor == 1 and wanted and leaf_bytes >= replicated_floor
+                    and key not in seen):
+                seen.add(key)
+                # the paged pool is synthesized here for accounting —
+                # no paper-scale launch path allocates one (the serve
+                # engine's pool is sized by --preflight against HBM),
+                # so its replication informs rather than gates
+                sev = "info" if label == "paged_cache" else "warning"
+                findings.append(Finding(
+                    "shard-replicated-large", sev,
+                    Location(symbol=f"{cell}/{label}{path}"),
+                    f"{leaf_bytes / 2**30:.2f} GiB leaf stays fully "
+                    f"replicated on all {devices} devices: recipe "
+                    f"{recipe.name!r} requested {tuple(spec)!r} but "
+                    f"sanitize_spec dropped every axis against shape "
+                    f"{shp}",
+                    "pick a recipe whose axes divide this shape (the "
+                    "*_seq variants), or reshape the tensor"))
+
+    dropped = spec_drop_count("indivisible")
+    if dropped:
+        ex = [f"{d.path}[{d.axis} vs dim {d.dim}]"
+              for d in spec_drops() if d.reason == "indivisible"][:3]
+        findings.append(Finding(
+            "shard-spec-dropped", "info",
+            Location(symbol=cell),
+            f"{dropped} requested mesh axes dropped for indivisibility "
+            f"under recipe {recipe.name!r} (silent replication), e.g. "
+            f"{'; '.join(ex)}"))
+    return findings
+
+
+@register_pass(
+    "sharding_prop",
+    rules=("shard-replicated-large", "shard-spec-dropped",
+           "shard-unknown-mesh-axis"),
+    description="propagate recipe PartitionSpecs over paper-scale "
+                "param/cache trees on the production meshes")
+def run_pass(ctx: AnalysisContext) -> List[Finding]:
+    from repro.configs import ARCHS, get_shape, shape_skip_reason
+    from repro.launch.presets import FULL
+
+    findings = find_unknown_axes()
+    seen: set = set()
+    for arch in sorted(ARCHS):
+        cfg = ARCHS[arch]
+        for kind, shape_name in _KIND_SHAPES.items():
+            shape = get_shape(shape_name)
+            if shape_skip_reason(cfg, shape):
+                continue
+            for mesh_name, spec in FULL.meshes.items():
+                findings.extend(propagate_cell(
+                    cfg, mesh_name, spec.axis_sizes(), kind, shape,
+                    replicated_floor=ctx.preset.replicated_leaf_bytes,
+                    seen=seen))
+    return findings

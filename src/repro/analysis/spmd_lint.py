@@ -1,0 +1,394 @@
+"""SPMD/collective lint: compiled-HLO and dry-run-artifact checks for
+communication and memory pathologies that only surface at scale.
+
+Two evidence sources, same rules:
+
+* **dry-run artifacts** (``artifacts/dryrun/<preset>/``) — every OK
+  baseline cell's measured per-chip collective bytes are gated against
+  the analytic ring-model expectation
+  (:func:`expected_collective_bytes`, calibrated so the live corpus
+  sits >= 2x inside the ``collective_slack`` factor), and its measured
+  ``memory_analysis()`` peak against the closed-form
+  :mod:`repro.analysis.capacity` model (``spmd-memory-drift``).
+* **fresh lowerings** — each preset arch's decode step is lowered and
+  compiled on a forced host mesh and the optimized HLO text is scanned
+  by the pure rule functions below (full-parameter all-gathers,
+  resharding thrash, host transfers). The functions take HLO *text*,
+  so every rule is fixture-testable (``tests/test_analysis_perf.py``)
+  exactly like ``collective_bytes_from_hlo``.
+
+Both sources degrade loudly, not silently: missing artifacts or an
+already-initialized single-device backend produce an informational
+``spmd-lowering-skipped`` finding instead of a false all-clear.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import re
+from typing import Any, Dict, List, Optional
+
+from repro.analysis.findings import Finding, Location
+from repro.analysis.registry import AnalysisContext, register_pass
+
+#: Collective ops whose result a later inverse op would round-trip.
+_INVERSE_KINDS = {"all-gather": "reduce-scatter",
+                  "reduce-scatter": "all-gather"}
+
+#: ``%name = <type> op(<operands>)`` for the ops this lint tracks.
+_HLO_OP_RE = re.compile(
+    r"%([\w\.\-]+)\s*=\s*([^=]*?)\s*"
+    r"(all-gather|reduce-scatter|all-reduce|all-to-all|"
+    r"collective-permute|infeed|outfeed|send|recv)"
+    r"(?:-start)?\(([^)]*)\)")
+
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred)\[([\d,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
+                "u32": 4, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _result_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_collective_ops(hlo_text: str) -> List[Dict[str, Any]]:
+    """Every tracked op in ``hlo_text`` as
+    ``{name, kind, bytes, operands, line}`` (async ``-done`` halves
+    skipped, like the roofline parser)."""
+    out = []
+    for lineno, line in enumerate(hlo_text.splitlines(), start=1):
+        if "-done" in line:
+            continue
+        m = _HLO_OP_RE.search(line)
+        if not m:
+            continue
+        name, type_str, kind, operands = m.groups()
+        out.append({
+            "name": name, "kind": kind,
+            "bytes": _result_bytes(type_str),
+            "operands": _OPERAND_RE.findall(operands),
+            "line": lineno, "text": line.strip(),
+        })
+    return out
+
+
+# ===========================================================================
+# Pure HLO rules (fixture-testable)
+# ===========================================================================
+def find_host_transfers(hlo_text: str) -> List[Dict[str, Any]]:
+    """Infeed/outfeed ops and ``is_host_transfer=true`` send/recv pairs
+    — a device<->host round trip inside a compiled step."""
+    hits = []
+    for op in _parse_collective_ops(hlo_text):
+        if op["kind"] in ("infeed", "outfeed"):
+            hits.append(op)
+        elif op["kind"] in ("send", "recv") \
+                and "is_host_transfer=true" in op["text"]:
+            hits.append(op)
+    return hits
+
+
+def find_replicated_gathers(hlo_text: str, param_bytes: float,
+                            frac: float = 0.5,
+                            min_param_bytes: int = 1 << 20,
+                            ) -> List[Dict[str, Any]]:
+    """All-gathers whose single result covers ``frac`` of the *full*
+    parameter tree: the recipe says the weights live sharded, yet one
+    op re-materializes them everywhere (the replication smell a
+    reduce-scatter/zero-3 layout exists to avoid).
+
+    Below ``min_param_bytes`` the rule is inert: against a smoke-scale
+    parameter tree any routine activation/cache gather would clear the
+    fraction, and a sub-MB weight gather is not the pathology this rule
+    names.
+    """
+    if param_bytes < min_param_bytes:
+        return []
+    hits = []
+    for op in _parse_collective_ops(hlo_text):
+        if op["kind"] != "all-gather":
+            continue
+        if op["bytes"] >= frac * param_bytes:
+            hits.append({**op, "param_frac": op["bytes"] / param_bytes})
+    return hits
+
+
+def find_reshard_thrash(hlo_text: str) -> List[Dict[str, Any]]:
+    """A collective consuming the direct result of its inverse on the
+    same buffer (reduce-scatter of a just-gathered value or the
+    reverse): the bytes moved twice buy nothing — the producer's input
+    sharding was already the consumer's output sharding."""
+    ops = _parse_collective_ops(hlo_text)
+    produced = {op["name"]: op for op in ops}
+    hits = []
+    for op in ops:
+        want = _INVERSE_KINDS.get(op["kind"])
+        if want is None:
+            continue
+        for operand in op["operands"]:
+            src = produced.get(operand)
+            if src is not None and src["kind"] == want:
+                hits.append({"producer": src, "consumer": op})
+    return hits
+
+
+def check_collective_oversize(measured_total: float, expected_total: float,
+                              slack: float) -> Optional[Dict[str, float]]:
+    """Gate measured per-chip collective bytes against the analytic
+    expectation x ``slack``; None when inside the budget."""
+    if expected_total <= 0 or measured_total <= slack * expected_total:
+        return None
+    return {"measured": measured_total, "expected": expected_total,
+            "ratio": measured_total / expected_total, "slack": slack}
+
+
+# ===========================================================================
+# Analytic collective expectation (the Workload-IR side of the gate)
+# ===========================================================================
+def expected_collective_bytes(cfg, shape, sizes: Dict[str, int]) -> float:
+    """Per-chip ICI link bytes one step *should* move: per-layer
+    activation reductions over the model axis, the sharded-vocab logits
+    reduction, gradient sync over data (train), decode attention /
+    SSM-state reductions against the live cache window, and the MoE
+    routing-tensor reductions. Ring factors via
+    :func:`repro.core.hardware.ring_collective_bytes`.
+
+    Deliberately an over-estimate on cells whose sharding avoids a
+    term (a replicated tiny cache needs no psum) — the lint only fires
+    *above* ``slack x expected``, so over-prediction is safe. On the
+    ci dry-run corpus measured/expected peaks at 3.3x; the default
+    ``collective_slack`` of 6 leaves ~2x regression headroom.
+    """
+    from repro.core.hardware import ring_collective_bytes as ring
+
+    dp = sizes.get("pod", 1) * sizes.get("data", 1)
+    ms = sizes.get("model", 1)
+    kind = shape.kind
+    B = shape.global_batch
+    S = 1 if kind == "decode" else shape.seq_len
+    tok = B * S
+    d, V, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    bdiv = dp if B % dp == 0 else 1
+    mult = 3 if kind == "train" else 1          # fwd + bwd + remat
+    kv_len = (getattr(shape, "kv_len", None) or shape.seq_len) \
+        if kind == "decode" else S
+    W = min(cfg.sliding_window or kv_len, kv_len)
+    if cfg.family == "hybrid":
+        L_attn, L_ssm = L // cfg.shared_attn_period, L
+    elif cfg.family == "ssm":
+        L_attn, L_ssm = 0, L
+    else:
+        L_attn, L_ssm = L, 0
+
+    exp = 0.0
+    # per-layer activation psum over the model axis (2 sublayers), f32
+    exp += L * 2 * ring(tok * d * 4 / bdiv, ms, "all-reduce") * mult
+    # sharded-vocab logits reduction
+    exp += ring(tok * V * 4 / bdiv, ms, "all-reduce")
+    if kind == "train":
+        exp += ring(4 * cfg.param_count() / max(ms, 1), dp, "all-reduce")
+    if kind == "decode":
+        exp += L_attn * ring(B * cfg.n_heads * W * 4, ms, "all-reduce")
+        if cfg.ssm is not None:
+            s = cfg.ssm
+            nh = d * s.expand // s.head_dim
+            exp += L_ssm * ring(B * nh * s.head_dim * s.d_state * 4,
+                                ms, "all-reduce")
+    if cfg.moe is not None:
+        mo = cfg.moe
+        cap = math.ceil(mo.capacity_factor * mo.experts_per_token
+                        * tok / mo.n_experts)
+        exp += L * mult * ring(tok * mo.n_experts * cap * 4 / bdiv,
+                               ms, "all-reduce")
+    if cfg.ssm is not None and kind != "decode":
+        s = cfg.ssm
+        d_inner = d * s.expand
+        nh = d_inner // s.head_dim
+        n_chunks = max(1, S // s.chunk_size)
+        st = (B * n_chunks * nh * s.head_dim * s.d_state * 4
+              + B * S * d_inner * 4) / bdiv
+        exp += L_ssm * mult * ring(st, ms, "all-reduce")
+    return exp
+
+
+# ===========================================================================
+# Artifact-cell lint
+# ===========================================================================
+def lint_artifact_cell(art: Dict[str, Any], launch_preset,
+                       *, slack: float, drift_tol: float) -> List[Finding]:
+    """Collective-oversize + memory-drift on one OK baseline cell."""
+    from repro.analysis.capacity import (capacity_from_artifact,
+                                         measured_peak_bytes)
+
+    cell = f"{art['arch']}/{art['shape']}/{art['mesh']}"
+    cfg = launch_preset.arch(art["arch"])
+    shape = launch_preset.shape(art["shape"])
+    findings: List[Finding] = []
+
+    exp = expected_collective_bytes(cfg, shape, art["mesh_axes"])
+    over = check_collective_oversize(art["collectives"]["total"], exp,
+                                     slack)
+    if over is not None:
+        findings.append(Finding(
+            "spmd-collective-oversize", "warning", Location(symbol=cell),
+            f"compiled step moves {over['measured'] / 1e6:.1f} MB/chip of "
+            f"collective traffic, {over['ratio']:.1f}x the analytic "
+            f"expectation ({over['expected'] / 1e6:.1f} MB, slack "
+            f"{slack:g}x) — XLA inserted communication the recipe "
+            f"doesn't account for",
+            "diff the cell's HLO collectives against the recipe's "
+            "intended resharding points"))
+
+    rep = capacity_from_artifact(art, launch_preset)
+    meas = measured_peak_bytes(art["memory"])
+    if meas > 0:
+        rel = abs(rep.peak_bytes - meas) / meas
+        if rel > drift_tol:
+            findings.append(Finding(
+                "spmd-memory-drift", "warning", Location(symbol=cell),
+                f"measured memory_analysis() peak {meas / 1e6:.1f} MB "
+                f"diverges {rel:.0%} from the capacity model's "
+                f"{rep.peak_bytes / 1e6:.1f} MB (tolerance "
+                f"{drift_tol:.0%}) — the closed-form model or the "
+                f"lowering changed without recalibration",
+                "refit analysis.capacity.CALIBRATION against the "
+                "regenerated dry-run corpus"))
+    return findings
+
+
+def _load_cells(preset_name: str) -> List[Dict[str, Any]]:
+    from repro.artifacts import dryrun_dir, list_cells
+
+    cells = []
+    for name in list_cells(preset_name):
+        with open(os.path.join(dryrun_dir(preset_name), name)) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+# ===========================================================================
+# Fresh-lowering lint
+# ===========================================================================
+def lint_lowered_hlo(hlo_text: str, *, label: str, param_bytes: float,
+                     gather_frac: float) -> List[Finding]:
+    """The three HLO-text rules over one compiled step."""
+    findings: List[Finding] = []
+    for op in find_host_transfers(hlo_text):
+        findings.append(Finding(
+            "spmd-host-transfer", "error", Location(symbol=label),
+            f"host transfer {op['kind']!r} ({op['name']}, HLO line "
+            f"{op['line']}) inside the compiled step — the device "
+            f"stalls on PCIe every iteration",
+            "keep host I/O outside the jitted step"))
+    for op in find_replicated_gathers(hlo_text, param_bytes,
+                                      frac=gather_frac):
+        findings.append(Finding(
+            "spmd-replicated-gather", "warning", Location(symbol=label),
+            f"one all-gather ({op['name']}, HLO line {op['line']}) "
+            f"materializes {op['bytes'] / 1e6:.1f} MB = "
+            f"{op['param_frac']:.0%} of the full parameter tree — the "
+            f"recipe's sharding is being undone wholesale",
+            "shard the consumer (or use a reduce-scatter layout) "
+            "instead of re-gathering the weights"))
+    for pair in find_reshard_thrash(hlo_text):
+        p, c = pair["producer"], pair["consumer"]
+        findings.append(Finding(
+            "spmd-reshard-thrash", "warning", Location(symbol=label),
+            f"{c['kind']} ({c['name']}, HLO line {c['line']}) consumes "
+            f"the direct result of its inverse {p['kind']} "
+            f"({p['name']}, line {p['line']}) — "
+            f"{(p['bytes'] + c['bytes']) / 1e6:.1f} MB reshard "
+            f"round-trip on one buffer",
+            "align the two ops' output shardings so XLA can cancel "
+            "the pair"))
+    return findings
+
+
+def lint_fresh_lowerings(ctx: AnalysisContext) -> List[Finding]:
+    """Lower + compile each preset arch's decode step on a forced host
+    mesh and scan the optimized HLO. Degrades to an informational
+    skip when the backend is already up with too few devices."""
+    from repro.launch.presets import CI, force_host_devices
+
+    try:
+        force_host_devices(CI.host_device_count())
+    except RuntimeError as e:
+        return [Finding(
+            "spmd-lowering-skipped", "info", Location(symbol="spmd_lint"),
+            f"fresh-lowering HLO checks skipped: {e}")]
+
+    import jax
+
+    from repro.analysis.capacity import tree_global_bytes
+    from repro.launch.lowering import build_lowered, default_recipe
+    from repro.launch.mesh import use_mesh
+    from repro.models.model import ModelRuntime, abstract_params
+
+    findings: List[Finding] = []
+    mesh = CI.build_mesh("single")
+    sizes = dict(zip(mesh.axis_names,
+                     (int(s) for s in mesh.devices.shape)))
+    shape = CI.shape("decode_32k")
+    rt = ModelRuntime(dtype="bfloat16", remat="none", attn_chunk=512,
+                      moe_dropless=True)
+    for arch in ctx.preset.jaxpr_archs:
+        cfg = CI.arch(arch)
+        if cfg.is_encoder_only:
+            continue
+        label = f"decode/{arch}@{'x'.join(map(str, mesh.devices.shape))}"
+        recipe = default_recipe(cfg, shape, sizes["model"])
+        with use_mesh(mesh):
+            compiled = build_lowered(cfg, shape, mesh, recipe, rt,
+                                     1).compile()
+        param_bytes = tree_global_bytes(abstract_params(cfg, "bfloat16"))
+        findings.extend(lint_lowered_hlo(
+            compiled.as_text(), label=label, param_bytes=param_bytes,
+            gather_frac=ctx.preset.gather_param_frac))
+    return findings
+
+
+# ===========================================================================
+# Pass
+# ===========================================================================
+@register_pass(
+    "spmd_lint",
+    rules=("spmd-collective-oversize", "spmd-replicated-gather",
+           "spmd-reshard-thrash", "spmd-host-transfer",
+           "spmd-memory-drift", "spmd-lowering-skipped"),
+    description="collective-bytes/memory gates over dry-run artifacts "
+                "+ HLO lint of freshly compiled decode steps")
+def run_pass(ctx: AnalysisContext) -> List[Finding]:
+    from repro.launch import presets as launch_presets
+
+    findings: List[Finding] = []
+    preset_name = ctx.preset.dryrun_preset
+    launch_preset = {"ci": launch_presets.CI,
+                     "full": launch_presets.FULL}[preset_name]
+    cells = _load_cells(preset_name)
+    linted = 0
+    for art in cells:
+        if art.get("status") != "OK" \
+                or art.get("variant", "baseline") != "baseline":
+            continue
+        findings.extend(lint_artifact_cell(
+            art, launch_preset, slack=ctx.preset.collective_slack,
+            drift_tol=ctx.preset.memory_drift_tol))
+        linted += 1
+    if linted == 0:
+        findings.append(Finding(
+            "spmd-lowering-skipped", "info", Location(symbol="spmd_lint"),
+            f"no '{preset_name}' dry-run artifacts found — collective/"
+            f"memory gates skipped (generate with python -m "
+            f"repro.launch.dryrun --preset {preset_name})"))
+    findings.extend(lint_fresh_lowerings(ctx))
+    return findings

@@ -69,6 +69,12 @@ def analysis_report_path() -> str:
     return os.path.join(analysis_dir(), "report.json")
 
 
+def analysis_baseline_path() -> str:
+    """The committed findings baseline ``--baseline`` diffs against
+    (the one path under ``artifacts/`` that is tracked in git)."""
+    return os.path.join(analysis_dir(), "baseline.json")
+
+
 def pp_dir() -> str:
     """Pipeline-parallel dry-run artifacts (kept out of the per-preset
     cell directories so the 80-cell census stays exact)."""

@@ -120,6 +120,56 @@ RECIPES: Dict[str, Recipe] = {
 # ---------------------------------------------------------------------------
 # Spec sanitization
 # ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SpecDrop:
+    """One mesh axis :func:`sanitize_spec` removed from a requested
+    spec — the information the silent degrade-to-replication used to
+    lose. ``reason`` is ``missing-axis`` (mesh doesn't have it; routine
+    for ``pod`` on 2-axis meshes), ``axis-reused`` (already sharding
+    another dim) or ``indivisible`` (extent doesn't divide the dim —
+    the one that silently replicates real bytes)."""
+
+    path: Optional[str]             # leaf path when the caller knows it
+    axis: str                       # the dropped mesh axis
+    spec: Tuple                     # the entries requested for the dim
+    dim: int                        # dim size the axis failed against
+    shape: Tuple[int, ...]
+    mesh_sizes: Tuple[Tuple[str, int], ...]
+    reason: str                     # missing-axis | axis-reused | indivisible
+
+
+#: Bounded record of every drop since the last reset (the total keeps
+#: counting past the cap). ``sharding_prop`` reads it; tests assert it.
+_SPEC_DROPS: list = []
+_SPEC_DROP_CAP = 4096
+_SPEC_DROP_TOTAL = 0
+
+
+def reset_spec_drops() -> None:
+    global _SPEC_DROP_TOTAL
+    _SPEC_DROPS.clear()
+    _SPEC_DROP_TOTAL = 0
+
+
+def spec_drops() -> Tuple[SpecDrop, ...]:
+    return tuple(_SPEC_DROPS)
+
+
+def spec_drop_count(reason: Optional[str] = None) -> int:
+    """Drops recorded since the last reset (cap-proof total when
+    ``reason`` is None)."""
+    if reason is None:
+        return _SPEC_DROP_TOTAL
+    return sum(1 for d in _SPEC_DROPS if d.reason == reason)
+
+
+def _record_drop(drop: SpecDrop) -> None:
+    global _SPEC_DROP_TOTAL
+    _SPEC_DROP_TOTAL += 1
+    if len(_SPEC_DROPS) < _SPEC_DROP_CAP:
+        _SPEC_DROPS.append(drop)
+
+
 def _mesh_sizes(mesh) -> Dict[str, int]:
     names = getattr(mesh, "axis_names", None)
     sizes = getattr(mesh, "axis_sizes", None)
@@ -131,7 +181,8 @@ def _mesh_sizes(mesh) -> Dict[str, int]:
     return {}
 
 
-def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh,
+                  path: Optional[str] = None) -> P:
     """Make ``spec`` legal for a tensor of ``shape`` on ``mesh``:
 
     * drop mesh axes the mesh doesn't have,
@@ -140,9 +191,13 @@ def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
 
     Degrades toward replication (never errors) — infeasible shardings
     are "out of budget", mirroring the analytical models' feasibility
-    gates.
+    gates. Every drop is recorded (:func:`spec_drops`, with ``path``
+    when the caller names the leaf) so the degrade is silent in control
+    flow but not in accounting — ``analysis.sharding_prop`` and the
+    tests read the record.
     """
     sizes = _mesh_sizes(mesh)
+    msizes = tuple(sizes.items())
     used: set = set()
     entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
     out = []
@@ -154,9 +209,17 @@ def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
         kept = []
         ext = 1
         for ax in parts:
-            if ax not in sizes or ax in used:
+            if ax not in sizes:
+                _record_drop(SpecDrop(path, ax, parts, dim, tuple(shape),
+                                      msizes, "missing-axis"))
+                continue
+            if ax in used:
+                _record_drop(SpecDrop(path, ax, parts, dim, tuple(shape),
+                                      msizes, "axis-reused"))
                 continue
             if dim % (ext * sizes[ax]) != 0:
+                _record_drop(SpecDrop(path, ax, parts, dim, tuple(shape),
+                                      msizes, "indivisible"))
                 continue
             kept.append(ax)
             used.add(ax)
@@ -236,14 +299,15 @@ def param_sharding_tree(axes_tree, recipe: Recipe, mesh, abstract) -> Any:
     reuses it with ``models.model.CACHE_AXES`` to shard the decode
     cache (see :func:`shard_tree`).
     """
-    ab_leaves, treedef = jax.tree.flatten(abstract)
+    path_leaves, treedef = jax.tree_util.tree_flatten_with_path(abstract)
     ax_leaves = jax.tree.flatten(axes_tree, is_leaf=_is_axes_leaf)[0]
-    assert len(ab_leaves) == len(ax_leaves), \
-        f"axes/param tree mismatch: {len(ax_leaves)} vs {len(ab_leaves)}"
+    assert len(path_leaves) == len(ax_leaves), \
+        f"axes/param tree mismatch: {len(ax_leaves)} vs {len(path_leaves)}"
     shardings = []
-    for leaf, axes in zip(ab_leaves, ax_leaves):
+    for (path, leaf), axes in zip(path_leaves, ax_leaves):
         axes = axes or (None,) * len(leaf.shape)
-        spec = sanitize_spec(recipe.spec_for(axes), leaf.shape, mesh)
+        spec = sanitize_spec(recipe.spec_for(axes), leaf.shape, mesh,
+                             path=jax.tree_util.keystr(path))
         shardings.append(NamedSharding(mesh, spec))
     return jax.tree.unflatten(treedef, shardings)
 

@@ -100,6 +100,21 @@ class Preset:
         force_host_devices(self.host_device_count())
 
 
+def request_host_devices(need: int) -> None:
+    """Mutate ``XLA_FLAGS`` toward ``need`` host devices WITHOUT
+    touching the backend — for callers that run before anything uses
+    jax and must not initialize it themselves (the analysis runner
+    requests devices this way so a later pass's
+    :func:`force_host_devices` finds them)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = _DEVCOUNT_RE.search(flags)
+    if m is None or int(m.group().rsplit("=", 1)[1]) < need:
+        flags = _DEVCOUNT_RE.sub("", flags).strip()
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={need}"
+            .strip())
+
+
 def force_host_devices(need: int) -> None:
     """Mutate ``XLA_FLAGS`` to force ``need`` host devices, then verify.
 
@@ -109,13 +124,7 @@ def force_host_devices(need: int) -> None:
     """
     import jax  # local: keep module import side-effect free
 
-    flags = os.environ.get("XLA_FLAGS", "")
-    m = _DEVCOUNT_RE.search(flags)
-    if m is None or int(m.group().rsplit("=", 1)[1]) < need:
-        flags = _DEVCOUNT_RE.sub("", flags).strip()
-        os.environ["XLA_FLAGS"] = (
-            f"{flags} --xla_force_host_platform_device_count={need}"
-            .strip())
+    request_host_devices(need)
     have = jax.local_device_count()   # initializes the backend
     if have < need:
         raise RuntimeError(

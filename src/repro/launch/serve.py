@@ -67,6 +67,14 @@ def main():
     ap.add_argument("--mesh", default=None,
                     help="DxM device mesh, e.g. 2x4 -> (data, model); "
                          "shards the engine via the decode recipe")
+    ap.add_argument("--preflight", action="store_true",
+                    help="gate the config through the closed-form HBM "
+                         "capacity model before allocating anything; "
+                         "reject oversized slots/max-len/page budgets "
+                         "(rule capacity-hbm-overflow)")
+    ap.add_argument("--hbm-gb", type=float, default=None,
+                    help="per-device HBM budget in GiB for --preflight "
+                         "(default: TPU v5e)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
@@ -75,6 +83,34 @@ def main():
         cfg = smoke_config(cfg)
     if cfg.is_encoder_only:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
+
+    if args.preflight:
+        # capacity() is pure shape math — runs before any device buffer
+        # exists, so an oversized config costs nothing to reject
+        from repro.analysis.capacity import serve_preflight
+        mesh_sizes = None
+        if args.mesh:
+            d, m = (int(x) for x in args.mesh.split("x"))
+            mesh_sizes = {"data": d, "model": m}
+        cap = serve_preflight(
+            cfg, n_slots=args.slots, max_len=args.max_len,
+            page_size=args.page_size or None,
+            page_budget=args.page_budget, mesh=mesh_sizes,
+            hbm_gb=args.hbm_gb)
+        print(f"preflight: predicted peak "
+              f"{cap.peak_bytes / 2**30:.3f} GiB / "
+              f"{cap.hbm_bytes / 2**30:.1f} GiB per device "
+              f"(params {cap.params_bytes / 2**30:.3f} GiB, cache "
+              f"{cap.cache_bytes / 2**30:.3f} GiB, recipe {cap.recipe}, "
+              f"utilization {cap.utilization:.2f})")
+        if not cap.fits:
+            raise SystemExit(
+                f"[capacity-hbm-overflow] {args.slots} slots x "
+                f"{args.max_len} tokens predicts "
+                f"{cap.peak_bytes / 2**30:.2f} GiB peak per device, over "
+                f"the {cap.hbm_bytes / 2**30:.1f} GiB budget — shrink "
+                f"--slots/--max-len, page the cache, or shard wider")
+
     rt = ModelRuntime(dtype="float32", remat="none", attn_chunk=128,
                       moe_dropless=True)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)

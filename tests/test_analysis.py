@@ -464,7 +464,9 @@ def test_clean_tree_full_ci_preset():
     assert counts["warning"] == 0, [f.describe() for f in report.findings
                                     if f.severity == "warning"]
     assert set(report.passes) == {"ast_lint", "contracts",
-                                  "kernel_validator", "jaxpr_lint"}
+                                  "kernel_validator", "jaxpr_lint",
+                                  "liveness", "sharding_prop",
+                                  "spmd_lint"}
     assert report.ok(strict=True)
 
 
