@@ -28,6 +28,12 @@ this repo runs end-to-end, so this benchmark closes that loop for it:
 * **prefix caching** — a repeated-system-prompt trace served cold
   (``prefix_cache=False``) and warm: the warm engine's hit rate and
   prefill-token/call savings are recorded, with token parity enforced.
+* **quantized KV** — the same mixed trace through two paged engines at
+  *equal KV HBM bytes*, one storing bf16 KV and one int8 KV (per-row
+  scales included in the byte budget): the int8 engine must sustain
+  >= 1.8x ``max_active`` at the identical byte budget, with a
+  teacher-forced logit-deviation sidebar bounded by
+  ``QUANT_PARITY_TOL``.
 
 On a CPU CI host the absolute ratio is meaningless (the prediction
 targets a TPU); the contract here is the *schema*: every run emits the
@@ -142,6 +148,128 @@ def _paged_vs_fixed(params, cfg, rt, *, n_slots: int, window: int,
     ok = (parity and hbm_ok
           and paged.stats.max_active > n_slots
           and paged.stats.kv_utilization > fixed.stats.kv_utilization)
+    return row, ok
+
+
+def _quantized_kv_trace(cfg, *, window: int, page_size: int,
+                        base_slots: int, max_new: int, seed: int):
+    """Equal-HBM int8-KV vs bf16-KV closed-loop mixed trace.
+
+    Both engines get the *same byte budget* — the bf16 pool's
+    ``base_slots * ceil(W/ps)`` pages, re-denominated into int8 pages by
+    the engine's own per-token byte model (int8 payload + 2 scale bytes
+    per row) — and the same deterministic request sequence: three
+    bucket-exact short chats then one long context, repeating. Page
+    needs are exact (prompt + max_new fills its prefill bucket), so the
+    expected admission pattern is computed in closed form and the
+    engines' ``max_active`` is asserted against it, not eyeballed.
+
+    head_dim is forced to 32 so the row-scale overhead is 2/64: the
+    int8 byte ratio (2D)/(D+2) = 1.88 leaves headroom above the 1.8x
+    concurrency bar. Accuracy rides as a sidebar: a teacher-forced
+    ``logit_parity`` run over the same prompt mix must stay within
+    ``QUANT_PARITY_TOL`` (greedy-token agreement is reported, not
+    asserted — near-tie argmax flips are a property of the logit gap).
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.models import init_params
+    from repro.models.model import ModelRuntime, page_count
+    from repro.serve import PagedServeEngine, Request
+    from repro.serve.parity import logit_parity
+
+    qcfg = cfg.replace(d_head=32)
+    params = init_params(jax.random.PRNGKey(seed + 3), qcfg)
+    rt_ref = ModelRuntime(dtype="bfloat16", remat="none", attn_chunk=32,
+                          moe_dropless=True)
+    rt_q = dataclasses.replace(rt_ref, kv_dtype="int8")
+
+    npp = page_count(window, page_size)
+    base = base_slots * npp                      # bf16 allocatable pages
+    per_tok_base = qcfg.head_dim * 2             # bf16 bytes / token / head
+    per_tok_kv = qcfg.head_dim + 2               # int8 payload + bf16 scale
+    bf16_budget = base + 1                       # +1: reserved null page
+    int8_budget = base * per_tok_base // per_tok_kv + 1
+
+    # -- deterministic trace: prompt + max_new exactly fills its prefill
+    # bucket, so pages_for == the scatter span == the closed-form need
+    short_bucket, long_bucket = window // 8, window // 2
+    short_need = page_count(short_bucket, page_size)
+    long_need = page_count(long_bucket, page_size)
+    rng = np.random.default_rng(seed + 3)
+    needs, prompts = [], []
+    while sum(needs) <= int8_budget - 1:         # one past the int8 pool
+        long = len(needs) % 4 == 3
+        needs.append(long_need if long else short_need)
+        plen = (long_bucket if long else short_bucket) - max_new
+        prompts.append(rng.integers(0, qcfg.vocab_size, plen)
+                       .astype(np.int32))
+    n_req = len(prompts)
+
+    def _first_wave(usable):
+        """Head-of-line admission: requests admitted before the pool
+        first blocks (everything finishes together afterwards, so this
+        IS the engine's max_active)."""
+        used = active = 0
+        for nd in needs:
+            if used + nd > usable:
+                break
+            used, active = used + nd, active + 1
+        return active
+
+    expect = {"bfloat16": _first_wave(bf16_budget - 1),
+              "int8": _first_wave(int8_budget - 1)}
+
+    engines, tok_s = {}, {}
+    for name, rt_e, budget in (("bfloat16", rt_ref, bf16_budget),
+                               ("int8", rt_q, int8_budget)):
+        eng = PagedServeEngine(params, qcfg, rt_e, n_slots=n_req,
+                               max_len=window, page_size=page_size,
+                               page_budget=budget, prefix_cache=False)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=p.copy(),
+                               max_new_tokens=max_new))
+        t0 = time.perf_counter()
+        eng.run(max_iters=5000)
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in eng.finished)
+        tok_s[name] = toks / wall if wall > 0 else float("nan")
+        engines[name] = eng
+    bf16, int8 = engines["bfloat16"], engines["int8"]
+
+    # accuracy sidebar over the same prompt mix (2 shorts + the long)
+    parity = logit_parity(params, qcfg, prompts[1:4], rt_ref=rt_ref,
+                          rt_test=rt_q, max_new_tokens=6)
+
+    bf16_bytes, int8_bytes = bf16.kv_cache_bytes(), int8.kv_cache_bytes()
+    ratio = (int8.stats.max_active / bf16.stats.max_active
+             if bf16.stats.max_active else float("nan"))
+    row = {
+        "trace": "quantized_kv", "window": window,
+        "page_size": page_size, "head_dim": qcfg.head_dim,
+        "requests": n_req, "max_new": max_new,
+        "page_budget_bf16": bf16_budget, "page_budget_int8": int8_budget,
+        "kv_hbm_bytes_bf16": bf16_bytes, "kv_hbm_bytes_int8": int8_bytes,
+        "max_active_bf16": bf16.stats.max_active,
+        "max_active_int8": int8.stats.max_active,
+        "max_active_ratio": ratio,
+        "kv_utilization_bf16": bf16.stats.kv_utilization,
+        "kv_utilization_int8": int8.stats.kv_utilization,
+        "tok_s_bf16": tok_s["bfloat16"], "tok_s_int8": tok_s["int8"],
+        "parity": parity.to_json(),
+    }
+    done_ok = all(len(e.finished) == n_req and not e.rejected
+                  for e in engines.values())
+    # the int8 pool must land on the bf16 pool's bytes (scale side-bands
+    # included), never above it beyond the page-granularity round-off
+    hbm_ok = int8_bytes <= bf16_bytes * 1.02 + 1 \
+        and int8_bytes >= bf16_bytes * 0.90
+    admit_ok = (bf16.stats.max_active == expect["bfloat16"]
+                and int8.stats.max_active == expect["int8"])
+    ok = (done_ok and hbm_ok and admit_ok and parity.within_tol
+          and ratio >= 1.8)
     return row, ok
 
 
@@ -315,6 +443,10 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
         params, cfg, rt, window=mixed_max_len, page_size=page_size,
         n_requests=prefix_requests, max_new=max_new, seed=seed)
     rows.append(prefix_row)
+    quant_row, quant_ok = _quantized_kv_trace(
+        cfg, window=mixed_max_len, page_size=page_size, base_slots=3,
+        max_new=max_new, seed=seed)
+    rows.append(quant_row)
 
     emit("serve_throughput", rows)
     if pred_rows:
@@ -325,7 +457,7 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
           and len(pred_rows) >= 1
           and eng.stats.prefill_compiles
           <= eng.scheduler.max_prefill_compiles()
-          and paged_ok and prefix_ok)
+          and paged_ok and prefix_ok and quant_ok)
     print(f"[serve/{cfg.name}] {len(done)} reqs, {toks} tokens, "
           f"{tok_s:.1f} tok/s, p50/p99 token "
           f"{rows[0]['p50_token_ms']:.1f}/{rows[0]['p99_token_ms']:.1f} "
@@ -343,6 +475,15 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
           f"prefill_tokens {prefix_row['prefill_tokens_warm']} warm vs "
           f"{prefix_row['prefill_tokens_cold']} cold, "
           f"parity={prefix_row['token_parity']}")
+    print(f"[serve/quant] equal-HBM int8-KV trace: max_active "
+          f"{quant_row['max_active_int8']} int8 vs "
+          f"{quant_row['max_active_bf16']} bf16 "
+          f"({quant_row['max_active_ratio']:.2f}x), kv bytes "
+          f"{quant_row['kv_hbm_bytes_int8']} vs "
+          f"{quant_row['kv_hbm_bytes_bf16']}, max_logit_dev "
+          f"{quant_row['parity']['max_logit_dev']:.4f} "
+          f"(tol {quant_row['parity']['tol']}), token_match "
+          f"{quant_row['parity']['token_match_frac']:.2f}")
     return {"tok_s": tok_s, "p50_token_ms": rows[0]["p50_token_ms"],
             "p99_token_ms": rows[0]["p99_token_ms"],
             "occupancy": occupancy, "requests": len(done),
@@ -352,6 +493,12 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
             "max_active_fixed": paged_row["max_active_fixed"],
             "paged_token_parity": paged_row["token_parity"],
             "kv_utilization_paged": paged_row["kv_utilization_paged"],
+            "max_active_int8": quant_row["max_active_int8"],
+            "max_active_bf16_paged": quant_row["max_active_bf16"],
+            "quant_max_active_ratio": quant_row["max_active_ratio"],
+            "quant_max_logit_dev": quant_row["parity"]["max_logit_dev"],
+            "quant_token_match_frac":
+            quant_row["parity"]["token_match_frac"],
             "prefix_hit_rate": prefix_row["prefix_hit_rate"],
             "prefix_prefill_tokens_saved":
             prefix_row["prefill_tokens_cold"]

@@ -15,9 +15,11 @@ demonstration of the kernel dispatch seam.
 ``--temperature`` switches the (per-request seeded, reproducible)
 sampler off greedy. ``--page-size`` swaps the per-slot contiguous
 cache for the paged engine (pooled KV pages + page tables +
-prompt-prefix sharing); tokens are again identical. The scheduler
-buckets the ten distinct prompt lengths onto a handful of prefill
-shapes — watch the compile count.
+prompt-prefix sharing); tokens are again identical. ``--kv-dtype
+int8`` stores the KV cache quantized (per-row symmetric, bf16 scale
+side-bands) — with ``--page-size`` the same byte budget re-denominates
+into ~2x pages. The scheduler buckets the ten distinct prompt lengths
+onto a handful of prefill shapes — watch the compile count.
 """
 import argparse
 import time
@@ -48,11 +50,14 @@ ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                 default=True,
                 help="share prompt-prefix pages across requests "
                      "(paged engine only)")
+ap.add_argument("--kv-dtype", choices=("bfloat16", "int8"), default=None,
+                help="KV-cache storage precision (default: the compute "
+                     "dtype); 'int8' quantizes rows at write time")
 args = ap.parse_args()
 
 cfg = smoke_config(ARCHS["starcoder2-3b"])
 rt = ModelRuntime(dtype="float32", remat="none", attn_chunk=64,
-                  use_kernels=args.use_kernels)
+                  use_kernels=args.use_kernels, kv_dtype=args.kv_dtype)
 print(f"kernel policy: {rt.kernel_policy().describe()}")
 sampler = (Sampler(kind="temperature", temperature=args.temperature,
                    top_k=32, seed=0)

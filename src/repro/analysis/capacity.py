@@ -157,26 +157,29 @@ def _batch_bytes(cfg, B: int, S: int, sizes: Dict[str, int],
     return total
 
 
-def _abstract_cache_tree(cfg, B: int, kv_len: int):
+def _abstract_cache_tree(cfg, B: int, kv_len: int,
+                         kv_dtype: Optional[str] = None):
     import jax
     import jax.numpy as jnp
 
     from repro.models.model import CACHE_AXES, cache_spec
 
-    cs = cache_spec(cfg, B, kv_len)
+    cs = cache_spec(cfg, B, kv_len, kv_dtype=kv_dtype)
     ab = {k: jax.ShapeDtypeStruct(s, jnp.dtype(d))
           for k, (s, d) in cs.items()}
     return ab, {k: CACHE_AXES[k] for k in cs}, cs
 
 
 def _abstract_paged_cache_tree(cfg, n_slots: int, page_budget: int,
-                               page_size: int, max_len: int):
+                               page_size: int, max_len: int,
+                               kv_dtype: Optional[str] = None):
     import jax
     import jax.numpy as jnp
 
     from repro.models.model import PAGED_CACHE_AXES, paged_cache_spec
 
-    cs = paged_cache_spec(cfg, n_slots, page_budget, page_size, max_len)
+    cs = paged_cache_spec(cfg, n_slots, page_budget, page_size, max_len,
+                          kv_dtype=kv_dtype)
     ab = {k: jax.ShapeDtypeStruct(s, jnp.dtype(d))
           for k, (s, d) in cs.items()}
     return ab, {k: PAGED_CACHE_AXES[k] for k in cs}, cs
@@ -218,8 +221,13 @@ def _peak_features(cfg, B: int, S: int, sizes: Dict[str, int],
     return f
 
 
+#: KV-cache leaves (payload + int8 scale side-bands) — the keys every
+#: byte-accounting sum walks.
+KV_LEAVES = ("k", "v", "kp", "vp", "ks", "vs")
+
+
 def _kv_leaf_keys(cache_tree) -> Tuple[str, ...]:
-    return tuple(k for k in cache_tree if k in ("k", "v", "kp", "vp"))
+    return tuple(k for k in cache_tree if k in KV_LEAVES)
 
 
 # ===========================================================================
@@ -268,7 +276,8 @@ def capacity(cfg, shape=None, mesh=None, recipe=None, *,
              page_size: int = 8,
              max_len: Optional[int] = None,
              chip=None,
-             param_dtype: Optional[str] = None) -> CapacityReport:
+             param_dtype: Optional[str] = None,
+             kv_dtype: Optional[str] = None) -> CapacityReport:
     """Predict one step's per-device HBM residency and peak.
 
     Either pass a ``ShapeConfig`` (``shape``) — the dry-run-cell form —
@@ -337,16 +346,19 @@ def capacity(cfg, shape=None, mesh=None, recipe=None, *,
         kv_len = getattr(shape, "kv_len", None) or shape.seq_len
         if page_budget is not None:
             cache_ab, cache_ax, cs = _abstract_paged_cache_tree(
-                cfg, B, page_budget, page_size, kv_len)
+                cfg, B, page_budget, page_size, kv_len, kv_dtype)
             notes.append(f"paged cache: {page_budget} pages x "
                          f"{page_size} tokens")
         else:
-            cache_ab, cache_ax, cs = _abstract_cache_tree(cfg, B, kv_len)
+            cache_ab, cache_ax, cs = _abstract_cache_tree(
+                cfg, B, kv_len, kv_dtype)
+        if kv_dtype is not None and kv_dtype != "bfloat16":
+            notes.append(f"kv_dtype={kv_dtype}")
         cache_b = tree_sharded_bytes(cache_ab, cache_ax, recipe, sizes)
         cache_global = tree_global_bytes(cache_ab)
         kv_global = sum(
             math.prod(s) * jnp.dtype(d).itemsize
-            for k, (s, d) in cs.items() if k in ("k", "v", "kp", "vp"))
+            for k, (s, d) in cs.items() if k in KV_LEAVES)
         args = pb + cache_b + _batch_bytes(cfg, B, S, sizes, kind)
 
     batch_b = _batch_bytes(cfg, B, S, sizes, kind)
@@ -409,23 +421,39 @@ def serve_preflight(cfg, *, n_slots: int, max_len: int,
                     page_size: Optional[int] = None,
                     page_budget: Optional[int] = None,
                     mesh=None, hbm_gb: Optional[float] = None,
-                    param_dtype: str = "float32") -> CapacityReport:
+                    param_dtype: str = "float32",
+                    kv_dtype: Optional[str] = None,
+                    dtype: str = "bfloat16") -> CapacityReport:
     """The serve launcher's capacity gate, evaluated before anything
     allocates. Paged configs default the pool to the fixed engine's
-    HBM (``n_slots * ceil(window/page_size) + 1`` pages), mirroring
-    the engine's own default."""
+    HBM *bytes* at the activation ``dtype`` (the engine runtime's
+    compute dtype), converted into pages at ``kv_dtype`` — the same
+    derivation ``PagedServeEngine`` uses, so the preflight gates
+    exactly the pool the engine will allocate
+    (``n_slots * ceil(window/page_size) + 1`` when the dtypes agree)."""
     chip: Any = None
     if hbm_gb is not None:
         chip = int(hbm_gb * 2**30)
     if page_size:
         if page_budget is None:
+            import jax.numpy as jnp
+
             from repro.models.model import _cache_window, page_count
             W = _cache_window(cfg, max_len)
-            page_budget = n_slots * page_count(W, page_size) + 1
+            base = n_slots * page_count(W, page_size)
+            kvd = kv_dtype or dtype
+            if kvd != dtype:
+                per_tok_base = cfg.head_dim * jnp.dtype(dtype).itemsize
+                per_tok_kv = (cfg.head_dim * jnp.dtype(kvd).itemsize
+                              + (2 if kvd == "int8" else 0))
+                base = base * per_tok_base // per_tok_kv
+            page_budget = base + 1
         return capacity(cfg, mesh=mesh, recipe="decode",
                         n_slots=n_slots, max_len=max_len,
                         page_budget=page_budget, page_size=page_size,
-                        chip=chip, param_dtype=param_dtype)
+                        chip=chip, param_dtype=param_dtype,
+                        kv_dtype=kv_dtype)
     return capacity(cfg, mesh=mesh, recipe="decode",
                     n_slots=n_slots, max_len=max_len,
-                    chip=chip, param_dtype=param_dtype)
+                    chip=chip, param_dtype=param_dtype,
+                    kv_dtype=kv_dtype)

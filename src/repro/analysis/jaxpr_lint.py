@@ -25,6 +25,12 @@ no weights materialize, no step executes. Per arch in the preset:
   under a bf16 runtime are reported at *info* severity only
   (``jaxpr-wide-dot``): softmax/SSM-state upcasts are intended, but the
   count is worth eyeballing when it moves.
+* **quantized-pool hygiene** (``jaxpr-int8-upcast``) — the int8-KV paged
+  decode step is traced with the quantized ``paged_cache_spec`` and any
+  ``convert_element_type`` that dequantizes a *full* int8 pool to float
+  is an error: correct impls gather the step's pages first and
+  dequantize only the gathered block, so a whole-pool upcast silently
+  re-materializes the bf16 cache the quantization was bought to avoid.
 """
 from __future__ import annotations
 
@@ -121,6 +127,40 @@ def scan_jaxpr(closed, *, label: str, rt_dtype: str) -> List[Finding]:
     return findings
 
 
+def scan_int8_upcast(closed, pool_shapes, *, label: str) -> List[Finding]:
+    """Flag whole-pool int8 -> float dequantization in a decode jaxpr.
+
+    A correct quantized decode gathers the pages (or rows) a step
+    actually reads and dequantizes only that block; a
+    ``convert_element_type`` whose int8 *input* has the full KV-pool
+    shape materializes the entire cache at float width — the silent
+    upcast that pays quantization's accuracy cost while keeping bf16's
+    HBM footprint and bandwidth.
+    """
+    import jax.numpy as jnp
+
+    pool_shapes = {tuple(s) for s in pool_shapes}
+    hits: Dict[Tuple, int] = {}
+    for eqn in _walk_eqns(closed.jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        src = getattr(eqn.invars[0].aval, "dtype", None)
+        dst = getattr(eqn.outvars[0].aval, "dtype", None)
+        if src != jnp.int8 or dst is None \
+                or not jnp.issubdtype(dst, jnp.floating):
+            continue
+        shape = tuple(eqn.invars[0].aval.shape)
+        if shape in pool_shapes:
+            hits[shape] = hits.get(shape, 0) + 1
+    return [Finding(
+        "jaxpr-int8-upcast", "error", Location(symbol=label),
+        f"{n}x convert_element_type dequantizes a full int8 KV pool "
+        f"{shape} to float inside the decode step — the whole-pool "
+        f"upcast defeats the quantized cache's byte budget",
+        "gather the step's pages/rows first, dequantize only the block")
+        for shape, n in sorted(hits.items())]
+
+
 def _aval_map(tree) -> Dict[str, Tuple[Tuple, str]]:
     import jax
     out = {}
@@ -179,7 +219,7 @@ def lint_arch(arch: str, *, max_len: int, page_size: int,
                 "jaxpr-trace-unstable", "error", Location(symbol=label),
                 f"hot path fails to abstract-trace: "
                 f"{type(e).__name__}: {e}"))
-            return
+            return None
         findings.extend(scan_jaxpr(closed, label=label, rt_dtype=rt.dtype))
         findings.extend(check_cache_stable(in_cache, new_cache, label=label))
         if str(logits.dtype) != rt.dtype:
@@ -193,6 +233,7 @@ def lint_arch(arch: str, *, max_len: int, page_size: int,
                 "re-tracing the identical signature yields a different "
                 "jaxpr — a nondeterministic trace retraces in production",
                 "remove trace-time randomness/id-dependence from the step"))
+        return closed
 
     check_decode(lambda p, c, t: decode_step(p, cfg, c, t, rt), cache,
                  f"decode_step/{arch}")
@@ -211,6 +252,26 @@ def lint_arch(arch: str, *, max_len: int, page_size: int,
             lambda p, c, t: decode_step_paged(
                 p, cfg, c, t, rt, page_size=page_size, window=W),
             pcache, f"decode_step_paged/{arch}")
+
+        # -- quantized pool: the int8 paged hot path must never
+        # dequantize the whole pool (jaxpr-int8-upcast); stability /
+        # host-sync / widen lint rides the same trace
+        import dataclasses
+        rt_q = dataclasses.replace(rt, kv_dtype="int8")
+        qspec = paged_cache_spec(cfg, batch, batch * npp + 1, page_size,
+                                 max_len, dtype=rt.dtype, kv_dtype="int8")
+        qcache = {k: jax.ShapeDtypeStruct(s, jnp.dtype(d))
+                  for k, (s, d) in qspec.items()}
+        qlabel = f"decode_step_paged/{arch}@int8"
+        closed_q = check_decode(
+            lambda p, c, t: decode_step_paged(
+                p, cfg, c, t, rt_q, page_size=page_size, window=W),
+            qcache, qlabel)
+        if closed_q is not None:
+            pools = [tuple(v.shape) for k, v in qcache.items()
+                     if k in ("kp", "vp") and str(v.dtype) == "int8"]
+            findings.extend(scan_int8_upcast(closed_q, pools,
+                                             label=qlabel))
 
     # -- prefill per scheduler bucket ---------------------------------------
     sched = Scheduler(cfg, max_len)
@@ -250,9 +311,10 @@ def lint_arch(arch: str, *, max_len: int, page_size: int,
 @register_pass(
     "jaxpr_lint",
     rules=("jaxpr-compile-count", "jaxpr-trace-unstable", "jaxpr-host-sync",
-           "jaxpr-dtype-widen", "jaxpr-wide-dot"),
-    description="abstract-trace decode/paged-decode/bucketed-prefill; "
-                "stability, compile-count, host-sync and dtype lint")
+           "jaxpr-dtype-widen", "jaxpr-wide-dot", "jaxpr-int8-upcast"),
+    description="abstract-trace decode/paged-decode/bucketed-prefill "
+                "(bf16 + int8-KV pools); stability, compile-count, "
+                "host-sync, dtype and whole-pool-dequant lint")
 def run_pass(ctx: AnalysisContext) -> List[Finding]:
     findings: List[Finding] = []
     for arch in ctx.preset.jaxpr_archs:

@@ -49,6 +49,11 @@ RULES: Dict[str, str] = {
                          "past its declared spec, inside a hot path",
     "jaxpr-wide-dot": "informational: f32 dot_generals under a bf16 "
                       "runtime (intended softmax/state upcasts included)",
+    "jaxpr-int8-upcast": "a decode step dequantizes an entire int8 KV "
+                         "pool to float (correct impls gather pages "
+                         "first; a whole-pool upcast materializes the "
+                         "full-precision cache the quantization was "
+                         "supposed to avoid)",
     # (3) contract checker
     "contract-cache-axes": "cache leaf missing from (or rank-mismatched "
                            "with) CACHE_AXES/PAGED_CACHE_AXES",

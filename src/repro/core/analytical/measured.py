@@ -40,11 +40,22 @@ from repro.core.workload import Op, Workload
 ENTRY_FIELDS = ("op", "arch", "shape", "kind", "source_op", "case",
                 "flops", "bytes", "impls", "winner", "best_s")
 
+#: Schema version the tuner stamps into ``calibration.json``. Bumped to
+#: 2 when the quantized ops (quant_matmul / quant_decode_attention /
+#: quant_paged_decode_attention) joined the tuning grids: a version-1
+#: table silently lacks them, so :func:`load_calibration` rejects stale
+#: payloads loudly instead of roofline-interpolating the quant ops from
+#: unrelated entries.
+CALIBRATION_VERSION = 2
+
 #: calibration entry op name -> Workload IR op kind it measures
 CALIB_OP_KIND = {
     "prefill_attention": "attention",
     "decode_attention": "attention",
     "paged_decode_attention": "attention",
+    "quant_matmul": "matmul",
+    "quant_decode_attention": "attention",
+    "quant_paged_decode_attention": "attention",
     "ssd_scan": "scan",
     "moe_gemm": "matmul",
     "rmsnorm": "norm",
@@ -72,6 +83,14 @@ def load_calibration(path: Optional[str] = None) -> Dict[str, Any]:
         raise CalibrationMissing(GENERATE_HINT.format(path=path))
     with open(path) as f:
         payload = json.load(f)
+    version = payload.get("version", 1)
+    if version != CALIBRATION_VERSION:
+        raise CalibrationMissing(
+            f"calibration at {path} is schema version {version}, this "
+            f"code expects {CALIBRATION_VERSION} (the quantized-op "
+            f"grids) — stale table; regenerate:\n"
+            f"    PYTHONPATH=src python -m repro.kernels.tune --preset "
+            f"{payload.get('preset', 'ci')}")
     entries = payload.get("entries")
     if not entries:
         raise CalibrationMissing(

@@ -29,7 +29,15 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.hardware import TPU_V5E, TPUSpec
-from repro.core.workload import Op, Workload, lm_workload
+from repro.core.workload import Op, Workload, dtype_bytes, lm_workload
+
+#: Accuracy-proxy cost the analytic DSE charges an int8 (weights + KV)
+#: candidate: max abs logit deviation vs the bf16 reference. The value
+#: is the upper envelope measured by the serving parity harness
+#: (``repro.serve.parity``) across the smoke arch families — the real
+#: per-deployment number comes from running that harness; this constant
+#: only ranks analytic candidates on the accuracy axis.
+INT8_LOGIT_DEV_PROXY = 0.02
 
 
 @dataclass(frozen=True)
@@ -204,13 +212,23 @@ class TPUModel:
                  dp: int = 16, model_axis: int = 16, pods: int = 1,
                  chip: TPUSpec = TPU_V5E,
                  flops_calibration: float = 1.0,
-                 workload: Optional[Workload] = None):
+                 workload: Optional[Workload] = None,
+                 quant_workload: Optional[Workload] = None,
+                 logit_dev_proxy: float = INT8_LOGIT_DEV_PROXY):
         self.cfg = cfg
         self.shape = shape
         # default: the analytic LM front-end; pass a jaxpr-traced
         # workload to run the DSE against the real model's op profile
         self.workload = workload if workload is not None \
             else lm_workload(cfg, shape)
+        # the int8 twin of the same profile (halved weight/KV traffic,
+        # identical flops) — evaluated when a point sets quant >= 0.5.
+        # A custom traced workload without an explicit quant twin falls
+        # back to the analytic int8 profile of the same (cfg, shape).
+        self.quant_workload = quant_workload if quant_workload is not None \
+            else lm_workload(cfg, shape, weight_dtype="int8",
+                             kv_dtype="int8")
+        self.logit_dev_proxy = logit_dev_proxy
         self.dp = dp
         self.model_axis = model_axis
         self.pods = pods
@@ -249,13 +267,23 @@ class TPUModel:
         elif plan.microbatches != 1:
             return EvalResult.infeasible(
                 "microbatching only applies to training")
-        foot = hbm_footprint(self.cfg, self.shape, plan, self.chip)
+        # precision axis: quant >= 0.5 evaluates the int8 twin (weights
+        # + KV stored int8) — same flops, ~half the HBM traffic and
+        # residency, charged the accuracy-proxy logit deviation
+        quant = point.get("quant", 0) >= 0.5
+        if quant and self.shape.kind == "train":
+            return EvalResult.infeasible(
+                "int8 storage precision is inference-only")
+        wl = self.quant_workload if quant else self.workload
+        foot = hbm_footprint(self.cfg, self.shape, plan, self.chip,
+                             weight_dtype="int8" if quant else None,
+                             kv_dtype="int8" if quant else None)
         if not foot["fits"]:
             return EvalResult.infeasible(
                 f"HBM overflow: {foot['total'] / 1e9:.1f} GB "
                 f"> {self.chip.hbm_bytes / 1e9:.1f} GB per chip",
                 detail=foot)
-        ana = analyze(self.workload, plan, chip=self.chip,
+        ana = analyze(wl, plan, chip=self.chip,
                       flops_calibration=self.flops_calibration)
         if ana.step_s <= 0:
             return EvalResult.infeasible("degenerate step time",
@@ -270,15 +298,28 @@ class TPUModel:
             resources={"hbm_bytes": foot["total"],
                        "compute_s": ana.compute_s,
                        "memory_s": ana.memory_s,
-                       "collective_s": ana.collective_s},
+                       "collective_s": ana.collective_s,
+                       "logit_dev": self.logit_dev_proxy if quant
+                       else 0.0},
             detail=ana)
 
 
 def hbm_footprint(cfg: ModelConfig, shape: ShapeConfig, plan: TPUPlan,
-                  chip: TPUSpec = TPU_V5E) -> Dict[str, float]:
+                  chip: TPUSpec = TPU_V5E,
+                  weight_dtype: Optional[str] = None,
+                  kv_dtype: Optional[str] = None) -> Dict[str, float]:
     """Per-chip HBM residency (params/opt/grads/activation carries/KV),
-    the feasibility gate the DSE enforces (the paper's M_max)."""
+    the feasibility gate the DSE enforces (the paper's M_max).
+
+    ``weight_dtype``/``kv_dtype`` set the inference storage precision
+    (default bfloat16 — the seed accounting, byte-exact). int8 KV adds
+    the 2-byte bf16 scale per (token, kv-head) row, mirroring
+    ``models.model.cache_spec``'s side-band leaves. Training always
+    accounts f32 master params/opt/grads regardless.
+    """
     n_params = cfg.param_count()
+    wdt = weight_dtype or "bfloat16"
+    kdt = kv_dtype or "bfloat16"
     dp = plan.dp * plan.pods
     ms = plan.tail.model_axis
     shard_ways = ms * (dp if plan.tail.dataflow == "IS" else 1)
@@ -292,15 +333,19 @@ def hbm_footprint(cfg: ModelConfig, shape: ShapeConfig, plan: TPUPlan,
         n_carry = cfg.n_layers if plan.remat != "none" else 4 * cfg.n_layers
         out["act_carries"] = carry * n_carry
     else:
-        out["params_bf16"] = 2.0 * n_params / ms
+        out["params"] = dtype_bytes(wdt) * n_params / ms
         if cfg.family in ("dense", "moe", "vlm"):
             # decode against a cache longer than seq_len (ShapeConfig.kv_len)
             cache_len = shape.seq_len
             if shape.kind == "decode" and getattr(shape, "kv_len", None):
                 cache_len = shape.kv_len
             w = min(cfg.sliding_window or cache_len, cache_len)
+            # bytes per cached element: payload + (int8 only) the bf16
+            # per-row scale amortized over head_dim
+            kv_elem = dtype_bytes(kdt) \
+                + (2.0 if kdt == "int8" else 0.0) / max(cfg.head_dim, 1)
             kv = (cfg.n_layers * shape.global_batch * w
-                  * cfg.n_kv_heads * cfg.head_dim * 2 * 2)
+                  * cfg.n_kv_heads * cfg.head_dim * 2 * kv_elem)
             out["kv_cache"] = kv / (dp * (ms if shape.kind == "decode"
                                           else 1))
         if cfg.ssm is not None:

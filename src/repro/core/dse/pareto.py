@@ -33,6 +33,16 @@ DEFAULT_OBJECTIVES: Tuple[Objective, ...] = (
     Objective("efficiency", True, lambda r: r.efficiency),
 )
 
+#: The precision-aware frontier: DEFAULT_OBJECTIVES plus the accuracy
+#: proxy quantized candidates are charged — max abs logit deviation vs
+#: the bf16 reference (``EvalResult.resources['logit_dev']``; 0.0 for
+#: full-precision points, so bf16 candidates are never accuracy-
+#: dominated and a quantized point must win on speed to join the front).
+PRECISION_OBJECTIVES: Tuple[Objective, ...] = DEFAULT_OBJECTIVES + (
+    Objective("logit_dev", False,
+              lambda r: r.resources.get("logit_dev", 0.0)),
+)
+
 
 @dataclass(frozen=True)
 class ParetoEntry:

@@ -24,7 +24,7 @@ from repro.core.analytical.tpu_model import (
     TPUPlan,
     analyze,
 )
-from repro.core.dse.pareto import ParetoFront
+from repro.core.dse.pareto import PRECISION_OBJECTIVES, ParetoFront
 from repro.core.dse.search import SearchResult, SearchStrategy, run_search
 from repro.core.dse.space import DesignSpace, Dimension
 from repro.core.hardware import TPU_V5E, TPUSpec
@@ -44,6 +44,10 @@ def tpu_design_space(cfg: ModelConfig,
         Dimension("log2_m", 0, 6, integer=True),
         Dimension("front_is", 0, 1 if per_layer else 0, integer=True),
         Dimension("tail_is", 0, 1, integer=True),
+        # precision axis: 0 = bf16 storage, 1 = int8 weights + KV (the
+        # quantized kernel/serving stack) — TPUModel.evaluate scores the
+        # int8 workload twin and charges the accuracy-proxy logit_dev
+        Dimension("quant", 0, 1, integer=True),
     ])
 
 
@@ -87,16 +91,18 @@ def explore_tpu(cfg: ModelConfig, shape: ShapeConfig,
     # models. A zero-fitness plateau gives PSO nothing to climb toward,
     # so feasible anchors matter more here than on the FPGA side.
     seeds = [space.from_dict(dict(sp=0, log2_m=m, front_is=1,
-                                  tail_is=1)) for m in (0, 3, 6)]
+                                  tail_is=1, quant=q))
+             for m in (0, 3, 6) for q in (0, 1)]
     seeds += [space.from_dict(dict(sp=cfg.n_layers, log2_m=m,
-                                   front_is=0, tail_is=1))
-              for m in (0, 3, 6)]
-    seeds.append(space.from_dict(dict(sp=0, log2_m=0, front_is=0,
-                                      tail_is=0)))
+                                   front_is=0, tail_is=1, quant=q))
+              for m in (0, 3, 6) for q in (0, 1)]
+    seeds += [space.from_dict(dict(sp=0, log2_m=0, front_is=0,
+                                   tail_is=0, quant=q)) for q in (0, 1)]
     res = run_search(
         model, space, strategy=strategy,
         objective=lambda r: r.efficiency, seed=seed,
         seed_points=seeds,
+        objectives=PRECISION_OBJECTIVES,
         n_particles=n_particles, n_iters=n_iters,
         population=n_particles, generations=n_iters)
     best_plan = model.plan_for(res.best_point)

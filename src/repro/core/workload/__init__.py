@@ -14,6 +14,7 @@ working.
 from repro.core.workload.ir import (
     ACTIVATION_FLOP_KINDS,
     ConvLayer,
+    DTYPE_BYTES,
     EmptyWorkloadError,
     OP_KINDS,
     Op,
@@ -23,6 +24,7 @@ from repro.core.workload.ir import (
     WorkloadError,
     as_conv_layers,
     ctc_stats,
+    dtype_bytes,
     total_ops,
 )
 from repro.core.workload.frontends.cnn import (
@@ -71,6 +73,7 @@ __all__ = [
     "Op", "OpInfo", "Workload", "ConvLayer",
     "WorkloadError", "EmptyWorkloadError",
     "OP_KINDS", "WEIGHT_FLOP_KINDS", "ACTIVATION_FLOP_KINDS",
+    "DTYPE_BYTES", "dtype_bytes",
     "total_ops", "ctc_stats", "as_conv_layers",
     # CNN front-end
     "CNN_ZOO", "ZOO_DEFAULT_INPUT", "INPUT_SIZE_CASES",

@@ -12,7 +12,8 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence
 
-from repro.core.workload.ir import ConvLayer, Op, Workload, WorkloadError
+from repro.core.workload.ir import (ConvLayer, DTYPE_BYTES, Op, Workload,
+                                    WorkloadError)
 
 
 # ---------------------------------------------------------------------------
@@ -151,6 +152,12 @@ INPUT_SIZE_CASES = [32, 64, 96, 128, 160, 192, 224, 256, 320, 384, 448, 512]
 # ---------------------------------------------------------------------------
 # IR lowering
 # ---------------------------------------------------------------------------
+def _bits_dtype(bits: int) -> Optional[str]:
+    """intN name for a bit width when the IR knows it, else None."""
+    name = f"int{bits}"
+    return name if name in DTYPE_BYTES else None
+
+
 def conv_layer_op(layer: ConvLayer, idx: int,
                   abits: int = 16, wbits: int = 16) -> Op:
     """One ConvLayer as a unified Op record (keeps the geometry)."""
@@ -166,6 +173,8 @@ def conv_layer_op(layer: ConvLayer, idx: int,
         weight_axis="cout",
         width=layer.cout,
         spatial=layer,
+        weight_dtype=_bits_dtype(wbits),
+        act_dtype=_bits_dtype(abits),
     )
 
 

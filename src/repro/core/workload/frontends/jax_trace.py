@@ -71,10 +71,14 @@ class _TraceState:
         }
 
     def add(self, kind: str, K: int, N: int, flops: float,
-            weight_bytes: float, act_in: float, act_out: float) -> None:
+            weight_bytes: float, act_in: float, act_out: float,
+            weight_dtype: Optional[str] = None,
+            act_dtype: Optional[str] = None) -> None:
         self.records.append(dict(kind=kind, K=int(K), N=int(N),
                                  flops=flops, weight_bytes=weight_bytes,
-                                 act_in=act_in, act_out=act_out, count=1))
+                                 act_in=act_in, act_out=act_out, count=1,
+                                 weight_dtype=weight_dtype,
+                                 act_dtype=act_dtype))
 
 
 def _dot_record(eqn, param: set, mult: float, st: _TraceState) -> None:
@@ -98,13 +102,16 @@ def _dot_record(eqn, param: set, mult: float, st: _TraceState) -> None:
         st.add("matmul", K, N, flops,
                weight_bytes=_aval_bytes(wvar) * mult,
                act_in=_aval_bytes(avar) * mult,
-               act_out=_aval_bytes(out) * mult)
+               act_out=_aval_bytes(out) * mult,
+               weight_dtype=str(wvar.aval.dtype),
+               act_dtype=str(out.aval.dtype))
     else:                                   # activation x activation
         N = out.aval.shape[-1] if out.aval.shape else 1
         st.add("attention", K, N, flops,
                weight_bytes=0.0,
                act_in=(_aval_bytes(lhs) + _aval_bytes(rhs)) * mult,
-               act_out=_aval_bytes(out) * mult)
+               act_out=_aval_bytes(out) * mult,
+               act_dtype=str(out.aval.dtype))
 
 
 def _conv_record(eqn, param: set, mult: float, st: _TraceState) -> None:
@@ -118,7 +125,9 @@ def _conv_record(eqn, param: set, mult: float, st: _TraceState) -> None:
     st.add("conv", int(k_per_out), int(cout), flops,
            weight_bytes=_aval_bytes(rhs) * mult if rhs_w else 0.0,
            act_in=_aval_bytes(eqn.invars[0]) * mult,
-           act_out=_aval_bytes(out) * mult)
+           act_out=_aval_bytes(out) * mult,
+           weight_dtype=str(rhs.aval.dtype) if rhs_w else None,
+           act_dtype=str(out.aval.dtype))
 
 
 def _map_params(inner_invars, outer_invars, param: set) -> set:
@@ -160,7 +169,9 @@ def _walk(jaxpr, param: set, mult: float, st: _TraceState,
                 st.add("embed", 0, int(src.aval.shape[-1]), 0.0,
                        weight_bytes=_aval_bytes(src) * mult,
                        act_in=_aval_bytes(eqn.invars[1]) * mult,
-                       act_out=_aval_bytes(eqn.outvars[0]) * mult)
+                       act_out=_aval_bytes(eqn.outvars[0]) * mult,
+                       weight_dtype=str(src.aval.dtype),
+                       act_dtype=str(eqn.outvars[0].aval.dtype))
         elif p == "scan":
             st.stats["scans"] += 1
             closed = eqn.params["jaxpr"]
@@ -284,7 +295,9 @@ def _aggregate(records: List[Dict[str, Any]], cfg: ModelConfig
         ops.append(Op(name=name, kind=kind, flops=r["flops"],
                       weight_bytes=r["weight_bytes"],
                       act_in_bytes=r["act_in"], act_out_bytes=r["act_out"],
-                      layer_idx=-1, weight_axis=axis, width=width))
+                      layer_idx=-1, weight_axis=axis, width=width,
+                      weight_dtype=r.get("weight_dtype"),
+                      act_dtype=r.get("act_dtype")))
     return tuple(ops)
 
 

@@ -31,6 +31,47 @@ class WorkloadError(ValueError):
     """A workload violates a structural contract (always names it)."""
 
 
+# ===========================================================================
+# Precision vocabulary
+# ===========================================================================
+#: Bytes per element of every dtype an Op may declare. fp8 aliases map
+#: onto the e4m3 storage width; int4 is the only sub-byte entry (packed
+#: two to a byte, so byte math stays exact with float arithmetic).
+DTYPE_BYTES: Dict[str, float] = {
+    "float64": 8.0,
+    "float32": 4.0,
+    "bfloat16": 2.0,
+    "float16": 2.0,
+    "int32": 4.0,
+    "int16": 2.0,
+    "int8": 1.0,
+    "uint8": 1.0,
+    "fp8": 1.0,
+    "float8_e4m3fn": 1.0,
+    "float8_e5m2": 1.0,
+    "int4": 0.5,
+}
+
+
+def dtype_bytes(dtype: Optional[str], default: float = 2.0) -> float:
+    """Bytes per element of a declared dtype name.
+
+    ``None`` means "unspecified — keep whatever byte accounting the
+    front-end already did" and returns ``default`` (bf16's 2 bytes, the
+    historical hardwired element size every consumer assumed).
+    Unknown names raise so a typo'd dtype can't silently halve or
+    double a byte budget.
+    """
+    if dtype is None:
+        return default
+    try:
+        return DTYPE_BYTES[dtype]
+    except KeyError:
+        raise WorkloadError(
+            f"unknown dtype {dtype!r}; known: {sorted(DTYPE_BYTES)}"
+        ) from None
+
+
 class EmptyWorkloadError(WorkloadError):
     """A derived quantity was requested from a workload with no ops."""
 
@@ -157,6 +198,13 @@ class Op:
     width:        size of that dim (divisibility check)
     spatial:      full conv geometry for CNN-domain ops (the FPGA
                   analytical models read this; None for LM/traced ops)
+    weight_dtype: declared storage dtype of the weight operand
+                  (:data:`DTYPE_BYTES` key). ``None`` = unspecified:
+                  the byte fields above are authoritative as-is and
+                  every consumer keeps its historical element-size
+                  assumption — adding these fields changes no number.
+    act_dtype:    declared dtype of the dominant activation operand
+                  (for attention ops: the KV-cache storage dtype).
     """
 
     name: str
@@ -169,6 +217,8 @@ class Op:
     weight_axis: Optional[str] = None
     width: int = 0
     spatial: Optional[ConvLayer] = None
+    weight_dtype: Optional[str] = None
+    act_dtype: Optional[str] = None
 
     @property
     def total_bytes(self) -> float:

@@ -48,7 +48,9 @@ import jax
 # ===========================================================================
 #: Op names, in dispatch-table order.
 KERNEL_OPS = ("prefill_attention", "decode_attention",
-              "paged_decode_attention", "rmsnorm", "ssd_scan", "moe_gemm")
+              "paged_decode_attention", "rmsnorm", "ssd_scan", "moe_gemm",
+              "quant_matmul", "quant_decode_attention",
+              "quant_paged_decode_attention")
 
 #: One default eps for every RMSNorm implementation. Historically
 #: ``models.layers.rmsnorm`` and ``kernels.rmsnorm.rmsnorm_pallas`` each
@@ -75,6 +77,9 @@ class KernelPolicy:
     rmsnorm: str = "xla"
     ssd_scan: str = "xla"
     moe_gemm: str = "xla"
+    quant_matmul: str = "xla"
+    quant_decode_attention: str = "xla"
+    quant_paged_decode_attention: str = "xla"
     params: ParamsTuple = ()
 
     # -- construction --------------------------------------------------------
@@ -350,3 +355,79 @@ def _moe_gemm_pallas(x, w, expert_of_row, *, n_experts: int,
     from repro.kernels.ops import moe_grouped_matmul
     return moe_grouped_matmul(x, w, expert_of_row, n_experts=n_experts,
                               block_m=block_m, block_f=block_f)
+
+
+# --- quantized ops (int8 weights / int8 KV + float scale side-bands) -------
+
+def _quant_matmul_example():
+    import jax.numpy as jnp
+    s = jax.ShapeDtypeStruct
+    return ((s((128, 64), jnp.float32), s((64, 256), jnp.int8),
+             s((256,), jnp.float32)), {})
+
+
+def _quant_decode_example():
+    import jax.numpy as jnp
+    s = jax.ShapeDtypeStruct
+    B, Hq, Hkv, D, W = 2, 4, 2, 64, 256
+    return ((s((B, Hq, D), jnp.float32),
+             s((B, W, Hkv, D), jnp.int8), s((B, W, Hkv, D), jnp.int8),
+             s((B, W, Hkv), jnp.bfloat16), s((B, W, Hkv), jnp.bfloat16),
+             s((B, W), jnp.bool_)), {})
+
+
+def _quant_paged_decode_example():
+    import jax.numpy as jnp
+    s = jax.ShapeDtypeStruct
+    B, Hq, Hkv, D, P, ps, NP = 2, 4, 2, 64, 16, 8, 4
+    return ((s((B, Hq, D), jnp.float32),
+             s((P, ps, Hkv, D), jnp.int8), s((P, ps, Hkv, D), jnp.int8),
+             s((P, ps, Hkv), jnp.bfloat16), s((P, ps, Hkv), jnp.bfloat16),
+             s((B, NP), jnp.int32), s((B, NP * ps), jnp.bool_)), {})
+
+
+@register_impl("quant_matmul", "xla")
+def _quant_matmul_xla(x, w_q, scale, **_):
+    from repro.kernels.quant import quant_matmul_xla
+    return quant_matmul_xla(x, w_q, scale)
+
+
+@register_impl("quant_matmul", "pallas", example=_quant_matmul_example)
+def _quant_matmul_pallas(x, w_q, scale, *, block_t: int = 128,
+                         block_n: int = 256, **_):
+    from repro.kernels.ops import quant_matmul
+    return quant_matmul(x, w_q, scale, block_t=block_t, block_n=block_n)
+
+
+@register_impl("quant_decode_attention", "xla")
+def _quant_decode_attention_xla(q, k_q, v_q, k_scale, v_scale, kv_mask, **_):
+    from repro.kernels.quant import quant_decode_attention_xla
+    return quant_decode_attention_xla(q, k_q, v_q, k_scale, v_scale, kv_mask)
+
+
+@register_impl("quant_decode_attention", "pallas",
+               example=_quant_decode_example)
+def _quant_decode_attention_pallas(q, k_q, v_q, k_scale, v_scale, kv_mask,
+                                   *, block_k: int = 512, **_):
+    from repro.kernels.ops import quant_decode_attention
+    return quant_decode_attention(q, k_q, v_q, k_scale, v_scale, kv_mask,
+                                  block_k=block_k)
+
+
+@register_impl("quant_paged_decode_attention", "xla")
+def _quant_paged_decode_attention_xla(q, k_pages, v_pages, k_scales,
+                                      v_scales, page_table, kv_mask, **_):
+    from repro.kernels.quant import quant_paged_decode_attention_xla
+    return quant_paged_decode_attention_xla(q, k_pages, v_pages, k_scales,
+                                            v_scales, page_table, kv_mask)
+
+
+@register_impl("quant_paged_decode_attention", "pallas",
+               example=_quant_paged_decode_example)
+def _quant_paged_decode_attention_pallas(q, k_pages, v_pages, k_scales,
+                                         v_scales, page_table, kv_mask, *,
+                                         pages_per_block: int = 1, **_):
+    from repro.kernels.ops import quant_paged_decode_attention
+    return quant_paged_decode_attention(q, k_pages, v_pages, k_scales,
+                                        v_scales, page_table, kv_mask,
+                                        pages_per_block=pages_per_block)

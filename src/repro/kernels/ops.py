@@ -19,6 +19,9 @@ from repro.kernels.decode_attention import decode_attention_splitkv
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.paged_attention import paged_decode_attention_splitkv
 from repro.kernels.moe_gemm import grouped_gemm_padded, sort_by_expert
+from repro.kernels.quant import (quant_decode_attention_splitkv,
+                                 quant_matmul_pallas,
+                                 quant_paged_decode_attention_splitkv)
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -77,3 +80,27 @@ def rmsnorm(x, scale, *, eps: float = 1e-6,
             block_rows: int = 256) -> jax.Array:
     return rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows,
                           interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n"))
+def quant_matmul(x, w_q, scale, *, block_t: int = 128,
+                 block_n: int = 256) -> jax.Array:
+    return quant_matmul_pallas(x, w_q, scale, block_t=block_t,
+                               block_n=block_n, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def quant_decode_attention(q, k_q, v_q, k_scale, v_scale, kv_mask, *,
+                           block_k: int = 512) -> jax.Array:
+    return quant_decode_attention_splitkv(
+        q, k_q, v_q, k_scale, v_scale, kv_mask, block_k=block_k,
+        interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_block",))
+def quant_paged_decode_attention(q, k_pages, v_pages, k_scales, v_scales,
+                                 page_table, kv_mask, *,
+                                 pages_per_block: int = 1) -> jax.Array:
+    return quant_paged_decode_attention_splitkv(
+        q, k_pages, v_pages, k_scales, v_scales, page_table, kv_mask,
+        pages_per_block=pages_per_block, interpret=not _on_tpu())

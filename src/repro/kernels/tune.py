@@ -48,11 +48,10 @@ import jax.numpy as jnp
 from repro.artifacts import calibration_path
 from repro.configs import get_arch, get_shape, smoke_config
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.analytical.measured import ENTRY_FIELDS  # noqa: F401
+from repro.core.analytical.measured import (CALIBRATION_VERSION,  # noqa: F401
+                                            ENTRY_FIELDS)
 from repro.core.workload import Workload, lm_workload
 from repro.kernels.dispatch import KERNEL_OPS, implementations
-
-CALIBRATION_VERSION = 1
 
 
 # ===========================================================================
@@ -130,6 +129,19 @@ CI = TunePreset(
             "pallas": ({"block_m": 16, "block_f": 32},
                        {"block_m": 32, "block_f": 32}),
         },
+        "quant_matmul": {
+            "xla": ({},),
+            "pallas": ({"block_t": 32, "block_n": 64},
+                       {"block_t": 64, "block_n": 128}),
+        },
+        "quant_decode_attention": {
+            "xla": ({},),
+            "pallas": ({"block_k": 32}, {"block_k": 64}),
+        },
+        "quant_paged_decode_attention": {
+            "xla": ({},),
+            "pallas": ({"pages_per_block": 1}, {"pages_per_block": 2}),
+        },
     },
     shrink_archs=True,
     reps=3,
@@ -183,6 +195,22 @@ FULL = TunePreset(
             "xla": ({},),
             "pallas": ({"block_m": 128, "block_f": 512},
                        {"block_m": 256, "block_f": 512}),
+        },
+        "quant_matmul": {
+            "xla": ({},),
+            "pallas": ({"block_t": 128, "block_n": 256},
+                       {"block_t": 128, "block_n": 512},
+                       {"block_t": 256, "block_n": 512}),
+        },
+        "quant_decode_attention": {
+            "xla": ({},),
+            "pallas": ({"block_k": 256}, {"block_k": 512},
+                       {"block_k": 1024}),
+        },
+        "quant_paged_decode_attention": {
+            "xla": ({},),
+            "pallas": ({"pages_per_block": 2}, {"pages_per_block": 4},
+                       {"pages_per_block": 8}),
         },
     },
     shrink_archs=False,
@@ -244,6 +272,9 @@ def cases_for_cell(cfg: ModelConfig, shape: ShapeConfig,
     entries stay (work, time)-consistent.
     """
     wl = lm_workload(cfg, shape)
+    # int8 twin of the same cell: its op records carry the reduced
+    # weight/KV byte counts the quantized cases must be priced at
+    wl_q = lm_workload(cfg, shape, weight_dtype="int8", kv_dtype="int8")
     key = jax.random.PRNGKey(0)
     B_wl = shape.global_batch
     B = min(B_wl, bench_batch) if bench_batch else B_wl
@@ -320,6 +351,58 @@ def cases_for_cell(cfg: ModelConfig, shape: ShapeConfig,
                  "page_size": ps, "n_pages": n_pool},
                 attn_op.flops * frac, attn_op.total_bytes * frac, mk_paged))
 
+        # quantized twins: the same decode attention read from an int8
+        # KV cache with per-row bf16 scales — byte counts come from the
+        # int8-annotated workload (payload + scale side-band)
+        attn_op_q = _find_op(wl_q, lambda o: o.kind == "attention")
+
+        def mk_qdec(key=key, W=W):
+            from repro.kernels.quant import quantize_rows
+            ks = jax.random.split(key, 3)
+            q = jax.random.normal(ks[0], (B, nq, hd), jnp.float32)
+            kc = jax.random.normal(ks[1], (B, W, nkv, hd), jnp.float32)
+            vc = jax.random.normal(ks[2], (B, W, nkv, hd), jnp.float32)
+            k_q, k_s = quantize_rows(kc)
+            v_q, v_s = quantize_rows(vc)
+            mask = jnp.ones((B, W), bool)
+            return q, k_q, v_q, k_s, v_s, mask
+
+        cases.append(BenchCase(
+            "quant_decode_attention", cfg.name, shape.name, shape.kind,
+            attn_op_q.name,
+            {"B": B, "W": W, "Hq": nq, "Hkv": nkv, "D": hd,
+             "kv_dtype": "int8"},
+            attn_op_q.flops * frac, attn_op_q.total_bytes * frac, mk_qdec))
+
+        ps_q = page_sizes[0]
+        npp_q = -(-W // ps_q)
+        n_pool_q = B * npp_q + 1
+
+        def mk_qpaged(key=key, ps=ps_q, npp=npp_q, n_pool=n_pool_q, W=W):
+            from repro.kernels.quant import quantize_rows
+            ks = jax.random.split(key, 4)
+            q = jax.random.normal(ks[0], (B, nq, hd), jnp.float32)
+            kp = jax.random.normal(ks[1], (n_pool, ps, nkv, hd),
+                                   jnp.float32)
+            vp = jax.random.normal(ks[2], (n_pool, ps, nkv, hd),
+                                   jnp.float32)
+            kp_q, kp_s = quantize_rows(kp)
+            vp_q, vp_s = quantize_rows(vp)
+            pt = jax.random.permutation(
+                ks[3], jnp.arange(1, n_pool, dtype=jnp.int32)
+            ).reshape(B, npp)
+            mask = jnp.broadcast_to(
+                jnp.arange(npp * ps)[None, :] < W, (B, npp * ps))
+            return q, kp_q, vp_q, kp_s, vp_s, pt, mask
+
+        cases.append(BenchCase(
+            "quant_paged_decode_attention", cfg.name, shape.name,
+            shape.kind, attn_op_q.name,
+            {"B": B, "W": W, "Hq": nq, "Hkv": nkv, "D": hd,
+             "page_size": ps_q, "n_pages": n_pool_q, "kv_dtype": "int8"},
+            attn_op_q.flops * frac, attn_op_q.total_bytes * frac,
+            mk_qpaged))
+
     scan_op = _find_op(wl, lambda o: o.kind == "scan")
     if scan_op is not None and not decode:
         from repro.models.ssm import ssm_dims
@@ -367,6 +450,37 @@ def cases_for_cell(cfg: ModelConfig, shape: ShapeConfig,
              + (moe_op.act_in_bytes + moe_op.act_out_bytes) * frac) / 3.0,
             mk_moe,
             kwargs={"n_experts": E}))
+
+    # quant_matmul: the cell's largest non-expert weight matmul with the
+    # weight stored int8 + per-output-channel f32 scales. The int8
+    # workload's op record supplies the reduced weight bytes; N is
+    # recovered from them (int8 => 1 byte/element), so the bench GEMM
+    # moves exactly the bytes the entry claims.
+    qmm_op = _find_op(
+        wl_q, lambda o: o.kind == "matmul" and o.weight_axis == "ffn") \
+        or _find_op(
+            wl_q, lambda o: o.kind == "matmul" and o.weight_axis == "heads"
+            and o.weight_bytes > 0)
+    if qmm_op is not None:
+        N = max(1, int(round(qmm_op.weight_bytes / d)))
+
+        def mk_qmm(key=key, N=N):
+            from repro.kernels.quant import quantize_channels
+            ks = jax.random.split(key, 2)
+            x = jax.random.normal(ks[0], (q_tokens, d), jnp.float32)
+            w = jax.random.normal(ks[1], (d, N), jnp.float32)
+            w_q, scale = quantize_channels(w)
+            return x, w_q, scale
+
+        cases.append(BenchCase(
+            "quant_matmul", cfg.name, shape.name, shape.kind, qmm_op.name,
+            {"T": q_tokens, "K": d, "N": N, "weight_dtype": "int8"},
+            qmm_op.flops * frac,
+            # weights are batch-independent; activations scale with the
+            # benched slice (same convention as the moe_gemm case)
+            qmm_op.weight_bytes
+            + (qmm_op.act_in_bytes + qmm_op.act_out_bytes) * frac,
+            mk_qmm))
 
     # rmsnorm: every model norms q_tokens rows of d — not an IR op
     # (norm FLOPs are folded into the analytic epilogue), so counts are

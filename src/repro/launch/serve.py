@@ -60,6 +60,13 @@ def main():
                     help="total pages in the pool incl. the null page "
                          "(default: slots * ceil(W/page_size) + 1 — the "
                          "fixed engine's KV HBM)")
+    ap.add_argument("--kv-dtype", choices=("bfloat16", "int8"),
+                    default=None,
+                    help="KV-cache storage precision (default: the "
+                         "runtime compute dtype). 'int8' quantizes "
+                         "per-(token, head) with bf16 scale side-bands; "
+                         "the paged engine re-denominates the same byte "
+                         "budget into ~2x pages")
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="share prompt-prefix pages across requests "
@@ -96,7 +103,8 @@ def main():
             cfg, n_slots=args.slots, max_len=args.max_len,
             page_size=args.page_size or None,
             page_budget=args.page_budget, mesh=mesh_sizes,
-            hbm_gb=args.hbm_gb)
+            hbm_gb=args.hbm_gb, kv_dtype=args.kv_dtype,
+            dtype="float32")   # matches the runtime constructed below
         print(f"preflight: predicted peak "
               f"{cap.peak_bytes / 2**30:.3f} GiB / "
               f"{cap.hbm_bytes / 2**30:.1f} GiB per device "
@@ -112,7 +120,7 @@ def main():
                 f"--slots/--max-len, page the cache, or shard wider")
 
     rt = ModelRuntime(dtype="float32", remat="none", attn_chunk=128,
-                      moe_dropless=True)
+                      moe_dropless=True, kv_dtype=args.kv_dtype)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
 
     if args.buckets == "exact":

@@ -41,6 +41,12 @@ class ModelRuntime:
     moe_dropless: bool = False   # capacity = T (prefill consistency/serving)
     moe_chunk: int = 0           # GShard token-group size (0 = one group)
     unroll_layers: bool = False  # fully unroll layer scans (cost probes)
+    # KV-cache storage precision. None (default) stores KV at the
+    # activation ``dtype``; a float dtype ("bfloat16" under a float32
+    # runtime) halves KV bytes by plain casting; "int8" quantizes
+    # per-(token, head) symmetric with bf16 scale side-bands "ks"/"vs"
+    # (rows quantize once at write time).
+    kv_dtype: Optional[str] = None
     # Per-op kernel selection. None defers to ``use_kernels``; an explicit
     # policy (e.g. tuned per-op winners from kernels/tune.py calibration)
     # overrides the bool entirely.
@@ -335,6 +341,23 @@ def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     return ce + aux, {"ce": ce, "aux": aux}
 
 
+def _kv_leaves(k, v, rt: ModelRuntime) -> Dict[str, jax.Array]:
+    """Contiguous-cache KV leaves from windowed prefill rows.
+
+    int8 KV quantizes here — at write time — so the cache leaves hand
+    off to :func:`decode_step` (and splice into a serving engine's
+    bigger cache) without any float->int8 ``astype`` ever touching the
+    payload buffers.
+    """
+    if rt.kv_dtype == "int8":
+        from repro.kernels.quant import quantize_rows
+        kq, ks = quantize_rows(k)
+        vq, vs = quantize_rows(v)
+        return {"k": kq, "ks": ks, "v": vq, "vs": vs}
+    return {"k": k.astype(rt.kv_dtype or rt.dtype),
+            "v": v.astype(rt.kv_dtype or rt.dtype)}
+
+
 def _fill_kv_window(k_full: jax.Array, W: int) -> jax.Array:
     """Place (B, S, Hkv, hd) prefill keys into a W-slot circular cache:
     key at absolute position p lives in slot p % W (last W kept)."""
@@ -385,7 +408,7 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
         kvs = cachemat                      # (k, v): (nL, B, S, Hkv, hd)
         k = jax.vmap(lambda t: _fill_kv_window(t, W))(kvs[0])
         v = jax.vmap(lambda t: _fill_kv_window(t, W))(kvs[1])
-        cache = {"pos": pos, "k": k.astype(dtype), "v": v.astype(dtype)}
+        cache = {"pos": pos, **_kv_leaves(k, v, rt)}
     elif fam == "ssm":
         states = cachemat                   # {'conv': (nL,B,K-1,C), 'ssm':...}
         cache = {"pos": pos,
@@ -401,7 +424,7 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
         v = jax.vmap(lambda t: _fill_kv_window(t, W))(kvs[1])
         cache = {"pos": pos, "conv": conv.astype(dtype),
                  "ssm": ssm.astype(jnp.float32),
-                 "k": k.astype(dtype), "v": v.astype(dtype)}
+                 **_kv_leaves(k, v, rt)}
 
     if lengths is None:
         x_last = x[:, -1:, :]
@@ -442,25 +465,41 @@ def cache_token_budget(cfg: ModelConfig, max_len: int,
 
 
 def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
-               dtype: str = "bfloat16") -> Dict[str, Tuple[Tuple, Any]]:
-    """{name: (shape, dtype)} — single source for zeros + abstract trees."""
+               dtype: str = "bfloat16",
+               kv_dtype: Optional[str] = None) -> Dict[str, Tuple[Tuple, Any]]:
+    """{name: (shape, dtype)} — single source for zeros + abstract trees.
+
+    ``kv_dtype`` overrides the KV buffers' storage dtype (default: the
+    activation ``dtype``). ``int8`` KV adds per-(token, head) scale
+    side-band leaves ``ks``/``vs`` (bf16, one scale per cached row per
+    kv head) — 1/head_dim the size of the payload buffers.
+    """
     hd = cfg.head_dim
     W = _cache_window(cfg, max_len)
+    kvd = kv_dtype or dtype
     spec: Dict[str, Tuple[Tuple, Any]] = {
         "pos": ((batch,), jnp.int32),    # per-sequence positions
     }
     fam = cfg.family
     if fam in ("dense", "moe", "vlm", "audio"):
-        spec["k"] = ((cfg.n_layers, batch, W, cfg.n_kv_heads, hd), dtype)
-        spec["v"] = ((cfg.n_layers, batch, W, cfg.n_kv_heads, hd), dtype)
+        spec["k"] = ((cfg.n_layers, batch, W, cfg.n_kv_heads, hd), kvd)
+        spec["v"] = ((cfg.n_layers, batch, W, cfg.n_kv_heads, hd), kvd)
+        if kvd == "int8":
+            spec["ks"] = ((cfg.n_layers, batch, W, cfg.n_kv_heads),
+                          "bfloat16")
+            spec["vs"] = ((cfg.n_layers, batch, W, cfg.n_kv_heads),
+                          "bfloat16")
     if fam in ("ssm", "hybrid"):
         cs = SSM.ssm_cache_shapes(cfg, batch)
         spec["conv"] = ((cfg.n_layers,) + cs["conv"], dtype)
         spec["ssm"] = ((cfg.n_layers,) + cs["ssm"], "float32")
     if fam == "hybrid":
         n_groups = cfg.n_layers // cfg.shared_attn_period
-        spec["k"] = ((n_groups, batch, W, cfg.n_kv_heads, hd), dtype)
-        spec["v"] = ((n_groups, batch, W, cfg.n_kv_heads, hd), dtype)
+        spec["k"] = ((n_groups, batch, W, cfg.n_kv_heads, hd), kvd)
+        spec["v"] = ((n_groups, batch, W, cfg.n_kv_heads, hd), kvd)
+        if kvd == "int8":
+            spec["ks"] = ((n_groups, batch, W, cfg.n_kv_heads), "bfloat16")
+            spec["vs"] = ((n_groups, batch, W, cfg.n_kv_heads), "bfloat16")
     return spec
 
 
@@ -468,21 +507,25 @@ CACHE_AXES = {
     "pos": ("batch",),
     "k": (None, "batch", "kv_seq", "kv_heads", None),
     "v": (None, "batch", "kv_seq", "kv_heads", None),
+    "ks": (None, "batch", "kv_seq", "kv_heads"),
+    "vs": (None, "batch", "kv_seq", "kv_heads"),
     "conv": (None, "batch", None, "ssm_inner"),
     "ssm": (None, "batch", "ssm_heads", None, None),
 }
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype: str = "bfloat16"):
+               dtype: str = "bfloat16", kv_dtype: Optional[str] = None):
     return {k: jnp.zeros(s, d)
-            for k, (s, d) in cache_spec(cfg, batch, max_len, dtype).items()}
+            for k, (s, d) in cache_spec(cfg, batch, max_len, dtype,
+                                        kv_dtype).items()}
 
 
 def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype: str = "bfloat16"):
+                   dtype: str = "bfloat16", kv_dtype: Optional[str] = None):
     return {k: jax.ShapeDtypeStruct(s, jnp.dtype(d))
-            for k, (s, d) in cache_spec(cfg, batch, max_len, dtype).items()}
+            for k, (s, d) in cache_spec(cfg, batch, max_len, dtype,
+                                        kv_dtype).items()}
 
 
 # ---------------------------------------------------------------------------
@@ -495,8 +538,14 @@ def page_count(tokens: int, page_size: int) -> int:
 
 def paged_cache_spec(cfg: ModelConfig, n_slots: int, n_pages: int,
                      page_size: int, max_len: int,
-                     dtype: str = "bfloat16") -> Dict[str, Tuple[Tuple, Any]]:
+                     dtype: str = "bfloat16",
+                     kv_dtype: Optional[str] = None
+                     ) -> Dict[str, Tuple[Tuple, Any]]:
     """{name: (shape, dtype)} for the paged decode cache.
+
+    ``kv_dtype='int8'`` stores the page pools quantized and adds pooled
+    scale side-bands ``ks``/``vs``: ``(L, n_pages, page_size, Hkv)``
+    bf16, one scale per cached row per kv head.
 
     KV lives in one pooled buffer per layer group — ``kp``/``vp``:
     ``(L, n_pages, page_size, Hkv, hd)`` — addressed through per-slot
@@ -510,6 +559,7 @@ def paged_cache_spec(cfg: ModelConfig, n_slots: int, n_pages: int,
     hd = cfg.head_dim
     W = _cache_window(cfg, max_len)
     npp = page_count(W, page_size)
+    kvd = kv_dtype or dtype
     spec: Dict[str, Tuple[Tuple, Any]] = {
         "pos": ((n_slots,), jnp.int32),
         "pt": ((n_slots, npp), jnp.int32),
@@ -517,8 +567,11 @@ def paged_cache_spec(cfg: ModelConfig, n_slots: int, n_pages: int,
     fam = cfg.family
     if fam in ("dense", "moe", "vlm", "audio"):
         shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, hd)
-        spec["kp"] = (shape, dtype)
-        spec["vp"] = (shape, dtype)
+        spec["kp"] = (shape, kvd)
+        spec["vp"] = (shape, kvd)
+        if kvd == "int8":
+            spec["ks"] = (shape[:-1], "bfloat16")
+            spec["vs"] = (shape[:-1], "bfloat16")
     if fam in ("ssm", "hybrid"):
         cs = SSM.ssm_cache_shapes(cfg, n_slots)
         spec["conv"] = ((cfg.n_layers,) + cs["conv"], dtype)
@@ -526,8 +579,11 @@ def paged_cache_spec(cfg: ModelConfig, n_slots: int, n_pages: int,
     if fam == "hybrid":
         n_groups = cfg.n_layers // cfg.shared_attn_period
         shape = (n_groups, n_pages, page_size, cfg.n_kv_heads, hd)
-        spec["kp"] = (shape, dtype)
-        spec["vp"] = (shape, dtype)
+        spec["kp"] = (shape, kvd)
+        spec["vp"] = (shape, kvd)
+        if kvd == "int8":
+            spec["ks"] = (shape[:-1], "bfloat16")
+            spec["vs"] = (shape[:-1], "bfloat16")
     return spec
 
 
@@ -540,6 +596,8 @@ PAGED_CACHE_AXES = {
     "pt": ("batch", None),
     "kp": (None, None, None, "kv_heads", None),
     "vp": (None, None, None, "kv_heads", None),
+    "ks": (None, None, None, "kv_heads"),
+    "vs": (None, None, None, "kv_heads"),
     "conv": CACHE_AXES["conv"],
     "ssm": CACHE_AXES["ssm"],
 }
@@ -547,10 +605,12 @@ PAGED_CACHE_AXES = {
 
 def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
                      page_size: int, max_len: int,
-                     dtype: str = "bfloat16"):
+                     dtype: str = "bfloat16",
+                     kv_dtype: Optional[str] = None):
     return {k: jnp.zeros(s, d)
             for k, (s, d) in paged_cache_spec(
-                cfg, n_slots, n_pages, page_size, max_len, dtype).items()}
+                cfg, n_slots, n_pages, page_size, max_len, dtype,
+                kv_dtype).items()}
 
 
 def write_prefill_pages(kp, vp, k, v, page_ids, *, page_size: int):
@@ -563,20 +623,39 @@ def write_prefill_pages(kp, vp, k, v, page_ids, *, page_size: int):
     row's first ``n_write`` logical pages; pad rows point at the null
     page (their garbage stays masked forever).
     """
-    L, width, S = k.shape[:3]
+    kp = _scatter_rows_to_pages(kp, k, page_ids, page_size)
+    vp = _scatter_rows_to_pages(vp, v, page_ids, page_size)
+    return kp, vp
+
+
+def _scatter_rows_to_pages(pool, rows, page_ids, page_size: int):
+    """Scatter (L, width, S, ...) contiguous rows into an
+    (L, n_pages, page_size, ...) pool at ``page_ids`` — shared by the
+    KV payload buffers and the int8 scale side-bands (which simply lack
+    the trailing head_dim axis)."""
+    L, width, S = rows.shape[:3]
     n_write = page_ids.shape[1]
     need = n_write * page_size
     if need > S:
-        pad = ((0, 0), (0, 0), (0, need - S), (0, 0), (0, 0))
-        k = jnp.pad(k, pad)
-        v = jnp.pad(v, pad)
-    tail = k.shape[3:]
-    kb = k[:, :, :need].reshape((L, width * n_write, page_size) + tail)
-    vb = v[:, :, :need].reshape((L, width * n_write, page_size) + tail)
+        pad = ((0, 0), (0, 0), (0, need - S)) + ((0, 0),) * (rows.ndim - 3)
+        rows = jnp.pad(rows, pad)
+    tail = rows.shape[3:]
+    blocks = rows[:, :, :need].reshape(
+        (L, width * n_write, page_size) + tail)
     flat = page_ids.reshape(-1)
-    kp = kp.at[:, flat].set(kb.astype(kp.dtype))
-    vp = vp.at[:, flat].set(vb.astype(vp.dtype))
-    return kp, vp
+    return pool.at[:, flat].set(blocks.astype(pool.dtype))
+
+
+def write_prefill_pages_quant(kp, vp, ks_pool, vs_pool, k, v, ks, vs,
+                              page_ids, *, page_size: int):
+    """int8 twin of :func:`write_prefill_pages`: scatters the already-
+    quantized payload rows plus their (L, width, S, Hkv) scale rows into
+    the pooled side-bands."""
+    kp = _scatter_rows_to_pages(kp, k, page_ids, page_size)
+    vp = _scatter_rows_to_pages(vp, v, page_ids, page_size)
+    ks_pool = _scatter_rows_to_pages(ks_pool, ks, page_ids, page_size)
+    vs_pool = _scatter_rows_to_pages(vs_pool, vs, page_ids, page_size)
+    return kp, vp, ks_pool, vs_pool
 
 
 def _attn_decode_one_paged(p, x, kp, vp, pt, pos, window: int,
@@ -615,6 +694,50 @@ def _attn_decode_one_paged(p, x, kp, vp, pt, pos, window: int,
     return x + y, kp, vp
 
 
+def _attn_decode_one_paged_q(p, x, kp, vp, ks, vs, pt, pos, window: int,
+                             page_size: int, cfg: ModelConfig,
+                             rt: ModelRuntime):
+    """int8-KV twin of :func:`_attn_decode_one_paged`: the new row is
+    quantized once at write time (payload into the int8 pools, per-head
+    scale into the pooled ``ks``/``vs`` side-bands) and attention runs
+    through the ``quant_paged_decode_attention`` dispatch op — which
+    dequantizes only the gathered pages, never the whole pool."""
+    from repro.kernels.quant import quantize_rows
+
+    B = x.shape[0]
+    W, ps = window, page_size
+    pol = rt.kernel_policy()
+    h = norm(x, p["ln1"], cfg.norm, policy=pol)[:, None, :]   # (B,1,d)
+    q, k, v = _attn_proj(p, h, cfg, policy=pol)
+    posv = pos[:, None]                                  # (B, 1)
+    if cfg.rope == "mrope":
+        posv = jnp.broadcast_to(posv[None], (3, B, 1))
+    q, k = L.apply_rope(q, k, posv, cfg)
+    row = (pos % W).astype(jnp.int32)                    # (B,)
+    phys = jnp.take_along_axis(pt, (row // ps)[:, None], axis=1)[:, 0]
+    kq, ksc = quantize_rows(k[:, 0])                     # (B,Hkv,hd)/(B,Hkv)
+    vq, vsc = quantize_rows(v[:, 0])
+    kp = kp.at[phys, row % ps].set(kq)
+    vp = vp.at[phys, row % ps].set(vq)
+    ks = ks.at[phys, row % ps].set(ksc.astype(ks.dtype))
+    vs = vs.at[phys, row % ps].set(vsc.astype(vs.dtype))
+    Wp = pt.shape[1] * ps
+    ar = jnp.arange(Wp)[None, :]
+    mask = (ar <= pos[:, None]) & (ar < W)               # (B, Wp)
+    o = dispatch("quant_paged_decode_attention", pol, q[:, 0], kp, vp,
+                 ks, vs, pt, mask)
+    x = x + o.reshape(B, -1) @ p["wo"].astype(x.dtype)
+
+    h2 = norm(x, p["ln2"], cfg.norm, policy=pol)
+    if cfg.moe is not None:
+        y, _ = MOE.moe_ffn(p["moe"], h2[:, None, :], cfg, dropless=True,
+                           policy=pol)
+        y = y[:, 0]
+    else:
+        y = _mlp(p, h2[:, None, :], cfg)[:, 0]
+    return x + y, kp, vp, ks, vs
+
+
 def decode_step_paged(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
                       tokens: jax.Array, rt: ModelRuntime,
                       *, page_size: int, window: int,
@@ -630,18 +753,34 @@ def decode_step_paged(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
     pt = cache["pt"]
     x = params["embed"].astype(rt.dtype)[tokens]          # (B, d)
     pol = rt.kernel_policy()
+    quant = "ks" in cache
 
     if fam in ("dense", "moe", "vlm", "audio"):
-        def body(x_, xs):
-            lp, kp, vp = xs
-            x2, kp, vp = _attn_decode_one_paged(
-                lp, x_, kp, vp, pt, pos, window, page_size, cfg, rt)
-            return x2, (kp, vp)
+        if quant:
+            def body(x_, xs):
+                lp, kp, vp, ks, vs = xs
+                x2, kp, vp, ks, vs = _attn_decode_one_paged_q(
+                    lp, x_, kp, vp, ks, vs, pt, pos, window, page_size,
+                    cfg, rt)
+                return x2, (kp, vp, ks, vs)
 
-        x, (kp_new, vp_new) = jax.lax.scan(
-            body, x, (params["blocks"], cache["kp"], cache["vp"]),
-            unroll=rt.unroll_layers)
-        new_cache = dict(cache, pos=pos + 1, kp=kp_new, vp=vp_new)
+            x, (kp_new, vp_new, ks_new, vs_new) = jax.lax.scan(
+                body, x, (params["blocks"], cache["kp"], cache["vp"],
+                          cache["ks"], cache["vs"]),
+                unroll=rt.unroll_layers)
+            new_cache = dict(cache, pos=pos + 1, kp=kp_new, vp=vp_new,
+                             ks=ks_new, vs=vs_new)
+        else:
+            def body(x_, xs):
+                lp, kp, vp = xs
+                x2, kp, vp = _attn_decode_one_paged(
+                    lp, x_, kp, vp, pt, pos, window, page_size, cfg, rt)
+                return x2, (kp, vp)
+
+            x, (kp_new, vp_new) = jax.lax.scan(
+                body, x, (params["blocks"], cache["kp"], cache["vp"]),
+                unroll=rt.unroll_layers)
+            new_cache = dict(cache, pos=pos + 1, kp=kp_new, vp=vp_new)
     else:  # hybrid
         period = cfg.shared_attn_period
         n_groups = cfg.n_layers // period
@@ -654,34 +793,57 @@ def decode_step_paged(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
         ssm_g = cache["ssm"].reshape((n_groups, period)
                                      + cache["ssm"].shape[1:])
 
-        def group(x_, xs):
-            gp, gidx, convs, ssms, kp, vp = xs
+        def inner(xc, ys):
+            lp, conv, ssm = ys
+            h = norm(xc, lp["ln"], cfg.norm, policy=pol)
+            y, st = SSM.ssm_decode_step(lp["ssm"], h, {
+                "conv": conv, "ssm": ssm}, cfg, policy=pol)
+            return xc + y, (st["conv"], st["ssm"])
 
-            def inner(xc, ys):
-                lp, conv, ssm = ys
-                h = norm(xc, lp["ln"], cfg.norm, policy=pol)
-                y, st = SSM.ssm_decode_step(lp["ssm"], h, {
-                    "conv": conv, "ssm": ssm}, cfg, policy=pol)
-                return xc + y, (st["conv"], st["ssm"])
-
-            x_, (conv2, ssm2) = jax.lax.scan(inner, x_, (gp, convs, ssms),
-                                             unroll=rt.unroll_layers)
-            sel = jax.tree.map(
+        def _shared_block(gidx):
+            return jax.tree.map(
                 lambda a: jax.lax.dynamic_index_in_dim(
                     a, gidx % nshared, 0, keepdims=False), params["shared"])
-            x_, kp, vp = _attn_decode_one_paged(
-                sel, x_, kp, vp, pt, pos, window, page_size, cfg, rt)
-            return x_, (conv2, ssm2, kp, vp)
 
-        x, (conv2, ssm2, kp_new, vp_new) = jax.lax.scan(
-            group, x, (grouped, jnp.arange(n_groups), conv_g, ssm_g,
-                       cache["kp"], cache["vp"]),
-            unroll=rt.unroll_layers)
-        new_cache = dict(
-            cache, pos=pos + 1,
-            conv=conv2.reshape(cache["conv"].shape),
-            ssm=ssm2.reshape(cache["ssm"].shape),
-            kp=kp_new, vp=vp_new)
+        if quant:
+            def group(x_, xs):
+                gp, gidx, convs, ssms, kp, vp, ks, vs = xs
+                x_, (conv2, ssm2) = jax.lax.scan(
+                    inner, x_, (gp, convs, ssms), unroll=rt.unroll_layers)
+                x_, kp, vp, ks, vs = _attn_decode_one_paged_q(
+                    _shared_block(gidx), x_, kp, vp, ks, vs, pt, pos,
+                    window, page_size, cfg, rt)
+                return x_, (conv2, ssm2, kp, vp, ks, vs)
+
+            x, (conv2, ssm2, kp_new, vp_new, ks_new, vs_new) = jax.lax.scan(
+                group, x, (grouped, jnp.arange(n_groups), conv_g, ssm_g,
+                           cache["kp"], cache["vp"], cache["ks"],
+                           cache["vs"]),
+                unroll=rt.unroll_layers)
+            new_cache = dict(
+                cache, pos=pos + 1,
+                conv=conv2.reshape(cache["conv"].shape),
+                ssm=ssm2.reshape(cache["ssm"].shape),
+                kp=kp_new, vp=vp_new, ks=ks_new, vs=vs_new)
+        else:
+            def group(x_, xs):
+                gp, gidx, convs, ssms, kp, vp = xs
+                x_, (conv2, ssm2) = jax.lax.scan(
+                    inner, x_, (gp, convs, ssms), unroll=rt.unroll_layers)
+                x_, kp, vp = _attn_decode_one_paged(
+                    _shared_block(gidx), x_, kp, vp, pt, pos, window,
+                    page_size, cfg, rt)
+                return x_, (conv2, ssm2, kp, vp)
+
+            x, (conv2, ssm2, kp_new, vp_new) = jax.lax.scan(
+                group, x, (grouped, jnp.arange(n_groups), conv_g, ssm_g,
+                           cache["kp"], cache["vp"]),
+                unroll=rt.unroll_layers)
+            new_cache = dict(
+                cache, pos=pos + 1,
+                conv=conv2.reshape(cache["conv"].shape),
+                ssm=ssm2.reshape(cache["ssm"].shape),
+                kp=kp_new, vp=vp_new)
 
     x = norm(x[:, None, :], params["final_norm"], cfg.norm, policy=pol)
     logits = _unembed(params, cfg, x)[:, 0]
@@ -720,6 +882,46 @@ def _attn_decode_one(p, x, k_cache, v_cache, pos, cfg: ModelConfig,
     return x + y, k_cache, v_cache
 
 
+def _attn_decode_one_q(p, x, k_cache, v_cache, ks_cache, vs_cache, pos,
+                       cfg: ModelConfig, rt: ModelRuntime):
+    """int8-KV twin of :func:`_attn_decode_one`: the new row is
+    quantized once at write time (payload int8, per-head scale into the
+    ``ks``/``vs`` side-bands) and attention runs through the
+    ``quant_decode_attention`` dispatch op."""
+    from repro.kernels.quant import quantize_rows
+
+    B = x.shape[0]
+    W = k_cache.shape[1]
+    pol = rt.kernel_policy()
+    h = norm(x, p["ln1"], cfg.norm, policy=pol)[:, None, :]   # (B,1,d)
+    q, k, v = _attn_proj(p, h, cfg, policy=pol)
+    posv = pos[:, None]                                  # (B, 1)
+    if cfg.rope == "mrope":
+        posv = jnp.broadcast_to(posv[None], (3, B, 1))
+    q, k = L.apply_rope(q, k, posv, cfg)
+    slot = (pos % W).astype(jnp.int32)                   # (B,)
+    bidx = jnp.arange(B)
+    kq, ksc = quantize_rows(k[:, 0])                     # (B,Hkv,hd)/(B,Hkv)
+    vq, vsc = quantize_rows(v[:, 0])
+    k_cache = k_cache.at[bidx, slot].set(kq)
+    v_cache = v_cache.at[bidx, slot].set(vq)
+    ks_cache = ks_cache.at[bidx, slot].set(ksc.astype(ks_cache.dtype))
+    vs_cache = vs_cache.at[bidx, slot].set(vsc.astype(vs_cache.dtype))
+    mask = jnp.arange(W)[None, :] <= pos[:, None]        # (B, W)
+    o = dispatch("quant_decode_attention", pol, q[:, 0], k_cache, v_cache,
+                 ks_cache, vs_cache, mask)
+    x = x + o.reshape(B, -1) @ p["wo"].astype(x.dtype)
+
+    h2 = norm(x, p["ln2"], cfg.norm, policy=pol)
+    if cfg.moe is not None:
+        y, _ = MOE.moe_ffn(p["moe"], h2[:, None, :], cfg, dropless=True,
+                           policy=pol)
+        y = y[:, 0]
+    else:
+        y = _mlp(p, h2[:, None, :], cfg)[:, 0]
+    return x + y, k_cache, v_cache, ks_cache, vs_cache
+
+
 def decode_step(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
                 tokens: jax.Array, rt: ModelRuntime = ModelRuntime(),
                 ) -> Tuple[Dict[str, jax.Array], jax.Array]:
@@ -728,17 +930,32 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
     x = params["embed"].astype(rt.dtype)[tokens]          # (B, d)
     fam = cfg.family
     pol = rt.kernel_policy()
+    quant = "ks" in cache
 
     if fam in ("dense", "moe", "vlm", "audio"):
-        def body(x_, xs):
-            lp, kc, vc = xs
-            x2, kc, vc = _attn_decode_one(lp, x_, kc, vc, pos, cfg, rt)
-            return x2, (kc, vc)
+        if quant:
+            def body(x_, xs):
+                lp, kc, vc, ksc, vsc = xs
+                x2, kc, vc, ksc, vsc = _attn_decode_one_q(
+                    lp, x_, kc, vc, ksc, vsc, pos, cfg, rt)
+                return x2, (kc, vc, ksc, vsc)
 
-        x, (k_new, v_new) = jax.lax.scan(
-            body, x, (params["blocks"], cache["k"], cache["v"]),
-            unroll=rt.unroll_layers)
-        new_cache = dict(cache, pos=pos + 1, k=k_new, v=v_new)
+            x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+                body, x, (params["blocks"], cache["k"], cache["v"],
+                          cache["ks"], cache["vs"]),
+                unroll=rt.unroll_layers)
+            new_cache = dict(cache, pos=pos + 1, k=k_new, v=v_new,
+                             ks=ks_new, vs=vs_new)
+        else:
+            def body(x_, xs):
+                lp, kc, vc = xs
+                x2, kc, vc = _attn_decode_one(lp, x_, kc, vc, pos, cfg, rt)
+                return x2, (kc, vc)
+
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["blocks"], cache["k"], cache["v"]),
+                unroll=rt.unroll_layers)
+            new_cache = dict(cache, pos=pos + 1, k=k_new, v=v_new)
     elif fam == "ssm":
         def body(x_, xs):
             lp, conv, ssm = xs
@@ -763,33 +980,55 @@ def decode_step(params, cfg: ModelConfig, cache: Dict[str, jax.Array],
         ssm_g = cache["ssm"].reshape((n_groups, period)
                                      + cache["ssm"].shape[1:])
 
-        def group(x_, xs):
-            gp, gidx, convs, ssms, kc, vc = xs
+        def inner(xc, ys):
+            lp, conv, ssm = ys
+            h = norm(xc, lp["ln"], cfg.norm, policy=pol)
+            y, st = SSM.ssm_decode_step(lp["ssm"], h, {
+                "conv": conv, "ssm": ssm}, cfg, policy=pol)
+            return xc + y, (st["conv"], st["ssm"])
 
-            def inner(xc, ys):
-                lp, conv, ssm = ys
-                h = norm(xc, lp["ln"], cfg.norm, policy=pol)
-                y, st = SSM.ssm_decode_step(lp["ssm"], h, {
-                    "conv": conv, "ssm": ssm}, cfg, policy=pol)
-                return xc + y, (st["conv"], st["ssm"])
-
-            x_, (conv2, ssm2) = jax.lax.scan(inner, x_, (gp, convs, ssms),
-                                             unroll=rt.unroll_layers)
-            sel = jax.tree.map(
+        def _shared_block(gidx):
+            return jax.tree.map(
                 lambda a: jax.lax.dynamic_index_in_dim(
                     a, gidx % nshared, 0, keepdims=False), params["shared"])
-            x_, kc, vc = _attn_decode_one(sel, x_, kc, vc, pos, cfg, rt)
-            return x_, (conv2, ssm2, kc, vc)
 
-        x, (conv2, ssm2, k_new, v_new) = jax.lax.scan(
-            group, x, (grouped, jnp.arange(n_groups), conv_g, ssm_g,
-                       cache["k"], cache["v"]),
-            unroll=rt.unroll_layers)
-        new_cache = dict(
-            cache, pos=pos + 1,
-            conv=conv2.reshape(cache["conv"].shape),
-            ssm=ssm2.reshape(cache["ssm"].shape),
-            k=k_new, v=v_new)
+        if quant:
+            def group(x_, xs):
+                gp, gidx, convs, ssms, kc, vc, ksc, vsc = xs
+                x_, (conv2, ssm2) = jax.lax.scan(
+                    inner, x_, (gp, convs, ssms), unroll=rt.unroll_layers)
+                x_, kc, vc, ksc, vsc = _attn_decode_one_q(
+                    _shared_block(gidx), x_, kc, vc, ksc, vsc, pos, cfg, rt)
+                return x_, (conv2, ssm2, kc, vc, ksc, vsc)
+
+            x, (conv2, ssm2, k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+                group, x, (grouped, jnp.arange(n_groups), conv_g, ssm_g,
+                           cache["k"], cache["v"], cache["ks"],
+                           cache["vs"]),
+                unroll=rt.unroll_layers)
+            new_cache = dict(
+                cache, pos=pos + 1,
+                conv=conv2.reshape(cache["conv"].shape),
+                ssm=ssm2.reshape(cache["ssm"].shape),
+                k=k_new, v=v_new, ks=ks_new, vs=vs_new)
+        else:
+            def group(x_, xs):
+                gp, gidx, convs, ssms, kc, vc = xs
+                x_, (conv2, ssm2) = jax.lax.scan(
+                    inner, x_, (gp, convs, ssms), unroll=rt.unroll_layers)
+                x_, kc, vc = _attn_decode_one(
+                    _shared_block(gidx), x_, kc, vc, pos, cfg, rt)
+                return x_, (conv2, ssm2, kc, vc)
+
+            x, (conv2, ssm2, k_new, v_new) = jax.lax.scan(
+                group, x, (grouped, jnp.arange(n_groups), conv_g, ssm_g,
+                           cache["k"], cache["v"]),
+                unroll=rt.unroll_layers)
+            new_cache = dict(
+                cache, pos=pos + 1,
+                conv=conv2.reshape(cache["conv"].shape),
+                ssm=ssm2.reshape(cache["ssm"].shape),
+                k=k_new, v=v_new)
 
     x = norm(x[:, None, :], params["final_norm"], cfg.norm, policy=pol)
     logits = _unembed(params, cfg, x)[:, 0]

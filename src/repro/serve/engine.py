@@ -241,7 +241,7 @@ class ServeEngine:
         """Build the (device) decode cache; the paged engine overrides
         this with the pooled page buffers."""
         return init_cache(self.cfg, self.n_slots, self.max_len,
-                          self.rt.dtype)
+                          self.rt.dtype, kv_dtype=self.rt.kv_dtype)
 
     def _decode(self, params, cache, tokens):
         """The decode step the jitted engine step traces."""
@@ -256,10 +256,13 @@ class ServeEngine:
         frees its pages here)."""
 
     def kv_cache_bytes(self) -> int:
-        """Device bytes held by the KV cache (contiguous or paged)."""
+        """Device bytes held by the KV cache (contiguous or paged),
+        including the quantization scale side-bands under
+        ``kv_dtype='int8'``."""
         return sum(int(self.cache[k].size
                        * jnp.dtype(self.cache[k].dtype).itemsize)
-                   for k in ("k", "v", "kp", "vp") if k in self.cache)
+                   for k in ("k", "v", "kp", "vp", "ks", "vs")
+                   if k in self.cache)
 
     def _live_tokens(self, active: List[int]) -> int:
         W = self.scheduler.window

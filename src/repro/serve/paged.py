@@ -49,7 +49,8 @@ import jax.numpy as jnp
 
 from repro.models.model import (PAGED_CACHE_AXES, decode_step_paged,
                                 init_paged_cache, page_count,
-                                write_prefill_pages)
+                                write_prefill_pages,
+                                write_prefill_pages_quant)
 from repro.serve.engine import Request, ServeEngine, _splice
 from repro.serve.scheduler import PAD_SAFE_FAMILIES, AdmissionPlan
 
@@ -250,7 +251,20 @@ class PagedServeEngine(ServeEngine):
             window = min(cfg.sliding_window, max_len)
         self._npp = page_count(window, page_size)   # page-table width
         if page_budget is None:
-            page_budget = n_slots * self._npp + 1
+            # equal-HBM default: the fixed-slot engine's KV *bytes* at
+            # the activation dtype, converted into pages at the cache's
+            # storage dtype. With kv_dtype == rt.dtype this is exactly
+            # the seed's n_slots * ceil(W/ps); under kv_dtype='int8' a
+            # page costs D*1 + 2 bytes per (token, kv-head) — payload
+            # plus the bf16 scale side-band — so the same byte budget
+            # buys ~2D/(D+2) times the pages.
+            base = n_slots * self._npp
+            if rt.kv_dtype and rt.kv_dtype != rt.dtype:
+                per_tok_base = cfg.head_dim * jnp.dtype(rt.dtype).itemsize
+                per_tok_kv = (cfg.head_dim * jnp.dtype(rt.kv_dtype).itemsize
+                              + (2 if rt.kv_dtype == "int8" else 0))
+                base = base * per_tok_base // per_tok_kv
+            page_budget = base + 1
         self.n_pages = int(page_budget)
         self.pages = PagedKVCache(self.n_pages, self.page_size)
         self._prefix_on = bool(prefix_cache) \
@@ -264,9 +278,15 @@ class PagedServeEngine(ServeEngine):
 
         ps = self.page_size
 
-        def _scatter_fn(kp, vp, k, v, page_ids):
-            return write_prefill_pages(kp, vp, k, v, page_ids,
-                                       page_size=ps)
+        if "ks" in self.cache:
+            def _scatter_fn(kp, vp, ksp, vsp, k, v, ks, vs, page_ids):
+                return write_prefill_pages_quant(
+                    kp, vp, ksp, vsp, k, v, ks, vs, page_ids,
+                    page_size=ps)
+        else:
+            def _scatter_fn(kp, vp, k, v, page_ids):
+                return write_prefill_pages(kp, vp, k, v, page_ids,
+                                           page_size=ps)
 
         # compiles once per (prefill bucket, admit width) — the same
         # bound the prefill itself already pays
@@ -276,7 +296,7 @@ class PagedServeEngine(ServeEngine):
     def _init_cache(self):
         return init_paged_cache(self.cfg, self.n_slots, self.n_pages,
                                 self.page_size, self.max_len,
-                                self.rt.dtype)
+                                self.rt.dtype, kv_dtype=self.rt.kv_dtype)
 
     def _decode(self, params, cache, tokens):
         return decode_step_paged(params, self.cfg, cache, tokens, self.rt,
@@ -432,10 +452,21 @@ class PagedServeEngine(ServeEngine):
             page_ids[j] = pages[:n_scatter]
             held.append(pages)
         with self._ctx():
-            kp, vp = self._scatter(self.cache["kp"], self.cache["vp"],
-                                   single["k"], single["v"],
-                                   jnp.asarray(page_ids))
-        self.cache = dict(self.cache, kp=kp, vp=vp)
+            if "ks" in self.cache:
+                # int8 KV: the prefill cache leaves are already
+                # quantized — scatter payload + scale side-bands
+                kp, vp, ksp, vsp = self._scatter(
+                    self.cache["kp"], self.cache["vp"],
+                    self.cache["ks"], self.cache["vs"],
+                    single["k"], single["v"],
+                    single["ks"], single["vs"], jnp.asarray(page_ids))
+                self.cache = dict(self.cache, kp=kp, vp=vp,
+                                  ks=ksp, vs=vsp)
+            else:
+                kp, vp = self._scatter(self.cache["kp"], self.cache["vp"],
+                                       single["k"], single["v"],
+                                       jnp.asarray(page_ids))
+                self.cache = dict(self.cache, kp=kp, vp=vp)
 
         # per-slot contiguous leaves (pos + recurrent state) splice as
         # in the fixed engine — only the KV rows page

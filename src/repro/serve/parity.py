@@ -1,0 +1,112 @@
+"""Quantized-vs-reference serving parity: the accuracy-proxy harness.
+
+Teacher-forced comparison of two :class:`~repro.models.model.
+ModelRuntime`\\ s over the same prompts: both runtimes prefill the same
+tokens and then decode the same forced continuation (the *reference*
+runtime's greedy tokens), so every step compares logits computed at an
+identical context — free-running divergence can never compound into the
+measurement. The report carries the max abs logit deviation (the
+accuracy-proxy objective the DSE's precision axis is scored on) and the
+greedy-argmax agreement.
+
+The acceptance contract is the deviation bound
+(:data:`~repro.kernels.quant.QUANT_PARITY_TOL`): per-row symmetric int8
+KV keeps logits within a small envelope of bf16, but near argmax *ties*
+a sub-tolerance deviation can still flip the greedy token — that is
+reported as ``token_match_frac``, not asserted, because it is a
+property of the logit gap, not of the quantizer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.quant import QUANT_PARITY_TOL
+from repro.models import decode_step, prefill
+from repro.models.model import ModelRuntime
+
+
+@dataclass(frozen=True)
+class ParityReport:
+    """Teacher-forced deviation of one runtime pair over a prompt set."""
+
+    max_logit_dev: float       # max abs logit deviation over every step
+    token_match_frac: float    # greedy-argmax agreement over every step
+    n_tokens: int              # compared positions (prefill + decode)
+    tol: float = QUANT_PARITY_TOL
+
+    @property
+    def within_tol(self) -> bool:
+        return self.max_logit_dev <= self.tol
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "max_logit_dev": round(float(self.max_logit_dev), 6),
+            "token_match_frac": round(float(self.token_match_frac), 4),
+            "n_tokens": int(self.n_tokens),
+            "tol": float(self.tol),
+            "within_tol": bool(self.within_tol),
+        }
+
+
+def logit_parity(params, cfg: ModelConfig,
+                 prompts: Sequence[np.ndarray], *,
+                 rt_ref: Optional[ModelRuntime] = None,
+                 rt_test: Optional[ModelRuntime] = None,
+                 max_new_tokens: int = 8,
+                 max_len: Optional[int] = None) -> ParityReport:
+    """Measure ``rt_test``'s logit deviation from ``rt_ref``.
+
+    Defaults compare the bf16 KV reference against the int8-quantized
+    cache (``ModelRuntime(kv_dtype='int8')``) — the serving benchmark's
+    accuracy sidebar. Both runtimes see identical tokens at every step:
+    the forced continuation is always the *reference* greedy argmax.
+    """
+    rt_ref = rt_ref if rt_ref is not None else ModelRuntime()
+    rt_test = rt_test if rt_test is not None \
+        else ModelRuntime(kv_dtype="int8")
+    rows = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+    if not rows:
+        raise ValueError("logit_parity needs at least one prompt")
+    B = len(rows)
+    S = max(len(p) for p in rows)
+    if max_len is None:
+        max_len = S + max_new_tokens
+    toks = np.zeros((B, S), np.int32)
+    lengths = np.zeros((B,), np.int32)
+    for i, p in enumerate(rows):
+        toks[i, : len(p)] = p
+        lengths[i] = len(p)
+
+    def _prefill(rt):
+        fn = jax.jit(lambda pr, t, ln: prefill(
+            pr, cfg, {"tokens": t}, max_len, rt, lengths=ln))
+        return fn(params, jnp.asarray(toks), jnp.asarray(lengths))
+
+    cache_r, log_r = _prefill(rt_ref)
+    cache_t, log_t = _prefill(rt_test)
+    step_r = jax.jit(lambda pr, c, t: decode_step(pr, cfg, c, t, rt_ref))
+    step_t = jax.jit(lambda pr, c, t: decode_step(pr, cfg, c, t, rt_test))
+
+    max_dev = 0.0
+    matches = 0
+    n = 0
+    for _ in range(max_new_tokens + 1):
+        lr = np.asarray(log_r, np.float32)
+        lt = np.asarray(log_t, np.float32)
+        max_dev = max(max_dev, float(np.max(np.abs(lr - lt))))
+        matches += int(np.sum(lr.argmax(-1) == lt.argmax(-1)))
+        n += B
+        forced = jnp.asarray(lr.argmax(-1).astype(np.int32))
+        cache_r, log_r = step_r(params, cache_r, forced)
+        cache_t, log_t = step_t(params, cache_t, forced)
+
+    return ParityReport(max_logit_dev=max_dev,
+                        token_match_frac=matches / max(n, 1),
+                        n_tokens=n)

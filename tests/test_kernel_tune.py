@@ -51,16 +51,20 @@ def calibration(tmp_path_factory):
 # ===========================================================================
 def test_cases_derive_from_workload_ops():
     pset = TUNE_PRESETS["ci"]
-    # dense prefill: attention + rmsnorm, no scan/moe
+    # dense prefill: attention + rmsnorm + the quantized GEMM, no
+    # scan/moe
     ops = {c.op for c in cases_for_cell(pset.arch("minicpm-2b"),
                                         pset.shape("prefill_32k"))}
-    assert ops == {"prefill_attention", "rmsnorm"}
-    # decode: split-KV attention (contiguous + its paged twin) instead
-    # of prefill attention
+    assert ops == {"prefill_attention", "quant_matmul", "rmsnorm"}
+    # decode: split-KV attention (contiguous + its paged twin, each
+    # with its int8-KV variant) instead of prefill attention
     dec = cases_for_cell(pset.arch("minicpm-2b"), pset.shape("decode_32k"),
                          page_sizes=pset.paged_page_sizes)
     ops = {c.op for c in dec}
-    assert ops == {"decode_attention", "paged_decode_attention", "rmsnorm"}
+    assert ops == {"decode_attention", "paged_decode_attention",
+                   "quant_decode_attention",
+                   "quant_paged_decode_attention", "quant_matmul",
+                   "rmsnorm"}
     # one paged case per preset page size, pool sized batch*pages + null
     paged = [c for c in dec if c.op == "paged_decode_attention"]
     assert sorted(c.case["page_size"] for c in paged) == \
@@ -87,7 +91,7 @@ def test_cases_derive_from_workload_ops():
 # ===========================================================================
 def test_calibration_schema(calibration):
     payload, path = calibration
-    assert payload["version"] == 1
+    assert payload["version"] == 2
     assert payload["preset"] == "ci"
     assert payload["entries"], "mini-sweep produced no entries"
     for e in payload["entries"]:
@@ -123,9 +127,15 @@ def test_load_calibration_loud_on_absence(tmp_path):
     with pytest.raises(CalibrationMissing, match="repro.kernels.tune"):
         load_calibration(str(tmp_path / "nope.json"))
     bad = tmp_path / "bad.json"
-    bad.write_text(json.dumps({"entries": [{"op": "rmsnorm"}]}))
+    bad.write_text(json.dumps({"version": 2,
+                               "entries": [{"op": "rmsnorm"}]}))
     with pytest.raises(CalibrationMissing, match="missing fields"):
         load_calibration(str(bad))
+    # a versionless (= v1, pre-quant) table is stale, not malformed
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({"entries": [{"op": "rmsnorm"}]}))
+    with pytest.raises(CalibrationMissing, match="schema version 1"):
+        load_calibration(str(stale))
 
 
 # ===========================================================================
