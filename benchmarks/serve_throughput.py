@@ -324,6 +324,72 @@ def _prefix_trace(params, cfg, rt, *, window: int, page_size: int,
     return row, ok
 
 
+def _scenario_replay(params, cfg, rt, *, scenario_name: str, n_slots: int,
+                     max_len: int, page_size: int, n_requests: int,
+                     seed: int):
+    """Replay a named traffic scenario through the live paged engine and
+    check bound soundness: the static per-token p50 *lower bound* from
+    ``deploy_preflight`` (service time only, zero queueing) must sit at
+    or below the measured p50 on the same spec; returns (row, ok)."""
+    from repro.analysis.deploy_lint import DeploymentSpec, deploy_preflight
+    from repro.serve import PagedServeEngine, Request
+    from repro.serve.scenarios import get_scenario
+
+    scen = get_scenario(scenario_name).scaled(max_len)
+    dep = DeploymentSpec(n_slots=n_slots, max_len=max_len,
+                         page_size=page_size, dtype="float32",
+                         param_dtype="float32")
+    rep = deploy_preflight(cfg, scen, deployment=dep)
+
+    eng = PagedServeEngine(params, cfg, rt, n_slots=n_slots,
+                           max_len=max_len, page_size=page_size)
+    trace = scen.sample_requests(n_requests, seed=seed)
+    rng = np.random.default_rng(seed + 4)
+    prompts = {i: rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+               for i, (_, plen, _) in enumerate(trace)}
+    token_lat = []
+    t0 = time.perf_counter()
+    i_next = 0
+    while i_next < len(trace) or eng.queue \
+            or any(s is not None for s in eng.slots):
+        now = time.perf_counter() - t0
+        while i_next < len(trace) and trace[i_next][0] <= now:
+            _, _, olen = trace[i_next]
+            eng.submit(Request(rid=i_next, prompt=prompts[i_next],
+                               max_new_tokens=olen))
+            i_next += 1
+        if not (eng.queue or any(s is not None for s in eng.slots)):
+            time.sleep(min(trace[i_next][0] - now, 0.05)
+                       if i_next < len(trace) else 0)
+            continue
+        before = eng.stats.tokens_out
+        t1 = time.perf_counter()
+        eng.step()
+        dt = time.perf_counter() - t1
+        token_lat.extend([dt] * (eng.stats.tokens_out - before))
+    lat = np.asarray(token_lat) * 1e3
+    p50 = float(np.percentile(lat, 50)) if len(lat) else float("nan")
+    p99 = float(np.percentile(lat, 99)) if len(lat) else float("nan")
+    sound = bool(rep.tok_p50_lb_ms <= p50)
+    row = {
+        "trace": "scenario_replay", "scenario": scen.name,
+        "requests": len(trace), "served": len(eng.finished),
+        "rate_req_s": scen.arrival.rate_rps,
+        "measured_p50_token_ms": p50, "measured_p99_token_ms": p99,
+        "static_p50_lb_ms": rep.tok_p50_lb_ms,
+        "static_p99_lb_ms": rep.tok_p99_lb_ms,
+        "static_ttft_lb_ms": rep.ttft_lb_ms,
+        "rho": rep.rho, "rho_peak": rep.rho_peak,
+        "best_batch": rep.best_batch,
+        "deploy_findings": [f.rule_id for f in rep.findings],
+        "bound_sound": sound,
+    }
+    ok = (sound and len(eng.finished) == len(trace)
+          and not eng.rejected
+          and not any(f.severity == "error" for f in rep.findings))
+    return row, ok
+
+
 def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
         max_len: int = 128, max_new: int = 12, seed: int = 0,
         load: float = 0.8, rate: Optional[float] = None,
@@ -447,6 +513,11 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
         cfg, window=mixed_max_len, page_size=page_size, base_slots=3,
         max_new=max_new, seed=seed)
     rows.append(quant_row)
+    scen_row, scen_ok = _scenario_replay(
+        params, cfg, rt, scenario_name="chat_burst", n_slots=n_slots,
+        max_len=max_len, page_size=page_size,
+        n_requests=min(12, n_requests), seed=seed)
+    rows.append(scen_row)
 
     emit("serve_throughput", rows)
     if pred_rows:
@@ -457,7 +528,7 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
           and len(pred_rows) >= 1
           and eng.stats.prefill_compiles
           <= eng.scheduler.max_prefill_compiles()
-          and paged_ok and prefix_ok and quant_ok)
+          and paged_ok and prefix_ok and quant_ok and scen_ok)
     print(f"[serve/{cfg.name}] {len(done)} reqs, {toks} tokens, "
           f"{tok_s:.1f} tok/s, p50/p99 token "
           f"{rows[0]['p50_token_ms']:.1f}/{rows[0]['p99_token_ms']:.1f} "
@@ -484,6 +555,12 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
           f"{quant_row['parity']['max_logit_dev']:.4f} "
           f"(tol {quant_row['parity']['tol']}), token_match "
           f"{quant_row['parity']['token_match_frac']:.2f}")
+    print(f"[serve/scenario] {scen_row['scenario']}: measured p50 "
+          f"{scen_row['measured_p50_token_ms']:.2f} ms vs static lower "
+          f"bound {scen_row['static_p50_lb_ms']:.4f} ms "
+          f"(sound={scen_row['bound_sound']}), rho={scen_row['rho']:.3f} "
+          f"at batch={scen_row['best_batch']}, served "
+          f"{scen_row['served']}/{scen_row['requests']}")
     return {"tok_s": tok_s, "p50_token_ms": rows[0]["p50_token_ms"],
             "p99_token_ms": rows[0]["p99_token_ms"],
             "occupancy": occupancy, "requests": len(done),
@@ -503,6 +580,10 @@ def run(arch: str = "minicpm-2b", n_requests: int = 24, n_slots: int = 4,
             "prefix_prefill_tokens_saved":
             prefix_row["prefill_tokens_cold"]
             - prefix_row["prefill_tokens_warm"],
+            "scenario": scen_row["scenario"],
+            "scenario_p50_token_ms": scen_row["measured_p50_token_ms"],
+            "scenario_static_p50_lb_ms": scen_row["static_p50_lb_ms"],
+            "scenario_bound_sound": scen_row["bound_sound"],
             "predicted_tok_s": pred_rows[0]["predicted_tok_s"]
             if pred_rows else None,
             "measured_over_predicted":

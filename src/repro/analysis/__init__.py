@@ -5,17 +5,22 @@ replication — *before* anything runs.
 
     PYTHONPATH=src python -m repro.analysis --preset ci --strict
 
-Seven pass families (see README §Static analysis): the Pallas kernel
+Eight pass families (see README §Static analysis): the Pallas kernel
 validator, the jaxpr hot-path lint, the cross-module contract checker,
 the shipped-bug-class AST lint, the SPMD/collective lint over compiled
 HLO and dry-run artifacts, the jaxpr liveness walk + capacity drift
-guards, and the paper-scale sharding-propagation check. Findings
-serialize to ``artifacts/analysis/report.json``; the closed-form HBM
-model behind ``launch/serve.py --preflight`` lives in
-:mod:`repro.analysis.capacity`.
+guards, the paper-scale sharding-propagation check, and the
+deployment-feasibility lint (scheduler liveness + queueing bounds over
+the traffic-scenario library). Findings serialize to
+``artifacts/analysis/report.json``; the closed-form HBM model behind
+``launch/serve.py --preflight`` lives in
+:mod:`repro.analysis.capacity`, and its scenario-aware twin
+``deploy_preflight`` in :mod:`repro.analysis.deploy_lint`.
 """
 from repro.analysis.capacity import (CapacityReport, capacity,
                                      serve_preflight)
+from repro.analysis.deploy_lint import (DeploymentSpec, DeployReport,
+                                        deploy_preflight)
 from repro.analysis.findings import (Finding, Location, Report,
                                      apply_suppressions, baseline_regressions,
                                      gate_counts, load_baseline,
@@ -28,4 +33,5 @@ __all__ = [
     "parse_suppressions", "PRESETS", "RULES", "AnalysisContext",
     "run_analysis", "capacity", "CapacityReport", "serve_preflight",
     "gate_counts", "load_baseline", "baseline_regressions",
+    "deploy_preflight", "DeploymentSpec", "DeployReport",
 ]

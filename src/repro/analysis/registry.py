@@ -101,6 +101,25 @@ RULES: Dict[str, str] = {
                           "(indivisible extent: silent replication)",
     "shard-unknown-mesh-axis": "a recipe rule names a mesh axis that "
                                "exists in no preset mesh (dead spec)",
+    # (8) deployment feasibility (scenario library x serving config)
+    "deploy-admission-deadlock": "a request shape within max_len needs "
+                                 "more pages than the pool holds: the "
+                                 "head-of-line wait never resolves",
+    "deploy-bucket-gap": "scenario prompt lengths with no admissible "
+                         "prefill plan, or chunk mode forcing most "
+                         "prompt tokens through one-token decode",
+    "deploy-compile-unbounded": "whole-deployment prefill-compile "
+                                "inventory (buckets x admit widths x kv "
+                                "dtypes) exceeds or lacks a static bound",
+    "deploy-slo-infeasible": "rho >= 1 or a latency lower bound beats "
+                             "the SLO at every admissible batch — no "
+                             "schedule can rescue the config",
+    "deploy-queue-saturation": "stable at the mean arrival rate but past "
+                               "the saturation knee at the scenario's "
+                               "peak rate (M/G/1 wait bound)",
+    "deploy-capacity-overflow": "deployment allocation or scenario "
+                                "concurrency demand exceeds per-device "
+                                "HBM (closed-form, jax-free)",
     # infrastructure
     "analysis-suppression": "ignore[...] comment without a justification",
     "analysis-pass-error": "an analysis pass itself crashed",

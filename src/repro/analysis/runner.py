@@ -26,6 +26,7 @@ _PASS_MODULES = (
     "repro.analysis.liveness",
     "repro.analysis.sharding_prop",
     "repro.analysis.spmd_lint",
+    "repro.analysis.deploy_lint",
 )
 
 

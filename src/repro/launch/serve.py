@@ -82,6 +82,14 @@ def main():
     ap.add_argument("--hbm-gb", type=float, default=None,
                     help="per-device HBM budget in GiB for --preflight "
                          "(default: TPU v5e)")
+    ap.add_argument("--scenario", default=None,
+                    help="named traffic scenario (repro.serve.scenarios) "
+                         "to sample requests from; with --preflight also "
+                         "runs the deploy_lint feasibility rules against "
+                         "it (scaled into --max-len if needed)")
+    ap.add_argument("--strict", action="store_true",
+                    help="refuse to launch on deploy-admission-deadlock "
+                         "(and any other error-severity deploy finding)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
@@ -90,6 +98,50 @@ def main():
         cfg = smoke_config(cfg)
     if cfg.is_encoder_only:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
+
+    if args.buckets == "exact":
+        buckets = ()
+    elif args.buckets:
+        buckets = tuple(int(b) for b in args.buckets.split(","))
+    else:
+        buckets = None
+
+    scenario = None
+    if args.scenario:
+        # deploy_preflight is jax-free closed-form math: always worth
+        # running when a scenario names the traffic we are about to serve
+        from repro.analysis.deploy_lint import (DeploymentSpec,
+                                                deploy_preflight)
+        from repro.serve.scenarios import get_scenario
+        mesh_sizes = None
+        if args.mesh:
+            d, m = (int(x) for x in args.mesh.split("x"))
+            mesh_sizes = {"data": d, "model": m}
+        scenario = get_scenario(args.scenario).scaled(args.max_len)
+        dep = DeploymentSpec(
+            n_slots=args.slots, max_len=args.max_len, buckets=buckets,
+            admit_width=args.admit_width, page_size=args.page_size,
+            page_budget=args.page_budget, dtype="float32",
+            param_dtype="float32",
+            kv_dtypes=(args.kv_dtype,) if args.kv_dtype else (),
+            mesh=mesh_sizes, hbm_gb=args.hbm_gb)
+        drep = deploy_preflight(cfg, scenario, deployment=dep)
+        if args.preflight:
+            print(f"deploy[{scenario.name}]: rho={drep.rho:.3f} "
+                  f"(peak {drep.rho_peak:.3f}) at batch={drep.best_batch}; "
+                  f"lower bounds tok p50/p99 {drep.tok_p50_lb_ms:.3f}/"
+                  f"{drep.tok_p99_lb_ms:.3f} ms, ttft "
+                  f"{drep.ttft_lb_ms:.1f} ms; compiles {drep.compiles} "
+                  f"(bound {drep.compile_bound or 'unbounded'}); cache "
+                  f"{drep.cache_tokens} tokens")
+            for f in drep.findings:
+                print(f"  [{f.severity}] {f.rule_id}: {f.message}")
+        errors = [f for f in drep.findings if f.severity == "error"]
+        if args.strict and errors:
+            raise SystemExit(
+                f"[{errors[0].rule_id}] scenario {scenario.name!r} is "
+                f"statically infeasible on this config: "
+                f"{errors[0].message}")
 
     if args.preflight:
         # capacity() is pure shape math — runs before any device buffer
@@ -123,12 +175,6 @@ def main():
                       moe_dropless=True, kv_dtype=args.kv_dtype)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
 
-    if args.buckets == "exact":
-        buckets = ()
-    elif args.buckets:
-        buckets = tuple(int(b) for b in args.buckets.split(","))
-    else:
-        buckets = None
     sched = Scheduler(cfg=cfg, max_len=args.max_len, buckets=buckets,
                       admit_width=args.admit_width)
     sampler = Sampler(kind=args.sampler, temperature=args.temperature,
@@ -150,11 +196,19 @@ def main():
         eng = eng_cls(params, cfg, rt, **kw)
 
     rng = np.random.default_rng(args.seed)
-    for i in range(args.requests):
-        plen = int(rng.integers(4, max(5, min(32, args.max_len // 2))))
-        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
-        eng.submit(Request(rid=i, prompt=prompt,
-                           max_new_tokens=args.max_new))
+    if scenario is not None:
+        # request shapes come from the scenario spec, so the measured
+        # run replays exactly what deploy_preflight bounded
+        for i, (_, plen, olen) in enumerate(
+                scenario.sample_requests(args.requests, seed=args.seed)):
+            prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+            eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=olen))
+    else:
+        for i in range(args.requests):
+            plen = int(rng.integers(4, max(5, min(32, args.max_len // 2))))
+            prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+            eng.submit(Request(rid=i, prompt=prompt,
+                               max_new_tokens=args.max_new))
 
     t0 = time.time()
     step_s = []

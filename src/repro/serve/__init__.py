@@ -1,14 +1,32 @@
 """Serving subsystem: scheduled, sampled, budget-checked continuous
 batching over contiguous or paged KV caches — single-device or
-mesh-sharded."""
-from repro.serve.engine import (EngineStats, Request, ServeEngine,
-                                make_serve_step)
-from repro.serve.paged import (PagedKVCache, PagedServeEngine,
-                               PagesExhausted, prefix_page_keys)
-from repro.serve.sampling import Sampler
-from repro.serve.scheduler import (AdmissionPlan, Scheduler,
-                                   default_buckets)
-from repro.serve.sharded import ShardedPagedServeEngine, ShardedServeEngine
+mesh-sharded.
+
+Engine classes pull in jax, so they are loaded lazily (PEP 562): the
+jax-free members — ``Scheduler`` (admission planning) and the traffic
+``Scenario`` library — import without jax, which is what lets the
+static analyzer (``repro.analysis.deploy_lint``) replay admission
+decisions and queueing bounds without touching a device runtime.
+"""
+from repro.serve.scenarios import (SCENARIOS, ArrivalSpec, LengthDist,
+                                   Scenario, SLOSpec, get_scenario)
+from repro.serve.scheduler import AdmissionPlan, Scheduler, default_buckets
+
+# name -> defining module, resolved on first attribute access so that
+# `import repro.serve.scheduler` / `.scenarios` stays jax-free
+_LAZY = {
+    "ServeEngine": "repro.serve.engine",
+    "Request": "repro.serve.engine",
+    "EngineStats": "repro.serve.engine",
+    "make_serve_step": "repro.serve.engine",
+    "Sampler": "repro.serve.sampling",
+    "PagedKVCache": "repro.serve.paged",
+    "PagedServeEngine": "repro.serve.paged",
+    "PagesExhausted": "repro.serve.paged",
+    "prefix_page_keys": "repro.serve.paged",
+    "ShardedServeEngine": "repro.serve.sharded",
+    "ShardedPagedServeEngine": "repro.serve.sharded",
+}
 
 __all__ = [
     "ServeEngine", "ShardedServeEngine", "Request", "EngineStats",
@@ -16,4 +34,20 @@ __all__ = [
     "make_serve_step",
     "PagedKVCache", "PagedServeEngine", "ShardedPagedServeEngine",
     "PagesExhausted", "prefix_page_keys",
+    "Scenario", "ArrivalSpec", "LengthDist", "SLOSpec", "SCENARIOS",
+    "get_scenario",
 ]
+
+
+def __getattr__(name):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value   # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(__all__) | set(globals()))

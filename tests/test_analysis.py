@@ -466,7 +466,7 @@ def test_clean_tree_full_ci_preset():
     assert set(report.passes) == {"ast_lint", "contracts",
                                   "kernel_validator", "jaxpr_lint",
                                   "liveness", "sharding_prop",
-                                  "spmd_lint"}
+                                  "spmd_lint", "deploy_lint"}
     assert report.ok(strict=True)
 
 

@@ -1,0 +1,357 @@
+"""deploy_lint: scenario library, queueing bounds, liveness rules.
+
+Three layers, mirroring the ISSUE's acceptance criteria:
+
+* property tests on the closed-form queueing bounds — rho >= 1 implies
+  infeasibility, bounds monotone in arrival rate and prompt length,
+  byte-identical reports across processes;
+* seeded fixture deployments that fire each of the six rules exactly,
+  in-process and through the runner CLI (the ``REPRO_DEPLOY_SCENARIOS``
+  env hook);
+* the lazy-loading contract: ``deploy_preflight`` never imports jax and
+  evaluates a (config, scenario) pair in under 100 ms.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.analysis.deploy_lint import (FIXTURE_ENV, RULE_IDS,
+                                        DeploymentSpec, deploy_preflight,
+                                        default_deployment)
+from repro.analysis.registry import RULES
+from repro.configs import get_arch, smoke_config
+from repro.serve.scenarios import (SCENARIOS, ArrivalSpec, LengthDist,
+                                   Scenario, SLOSpec)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg(arch="minicpm-2b"):
+    return smoke_config(get_arch(arch))
+
+
+def _scenario(rate=2.0, prompts=((16, 1.0), (32, 1.0)),
+              outputs=((8, 1.0), (16, 1.0)), process="poisson",
+              peak=1.0, slo=(2000.0, 50.0, 150.0)):
+    return Scenario(
+        name="synthetic", description="test",
+        arrival=ArrivalSpec(rate_rps=rate, process=process,
+                            peak_factor=peak),
+        prompt_lens=LengthDist(tuple(prompts)),
+        output_lens=LengthDist(tuple(outputs)),
+        slo=SLOSpec(ttft_ms=slo[0], tok_p50_ms=slo[1], tok_p99_ms=slo[2]))
+
+
+def rule_ids(report):
+    return [f.rule_id for f in report.findings]
+
+
+# ======================================================================
+# Scenario library
+# ======================================================================
+def test_library_has_required_scenarios():
+    assert {"chat_burst", "rag_long_context", "code_completion",
+            "diurnal_open_loop"} <= set(SCENARIOS)
+    for s in SCENARIOS.values():
+        assert s.prompt_lens.min >= 1 and s.output_lens.min >= 1
+        assert s.slo.tok_p99_ms >= s.slo.tok_p50_ms
+
+
+def test_scenario_json_roundtrip():
+    for s in SCENARIOS.values():
+        assert Scenario.from_json(s.to_json()) == s
+
+
+def test_scaled_fits_max_len():
+    for s in SCENARIOS.values():
+        t = s.scaled(64)
+        assert t.max_context() <= 64
+        assert t.arrival == s.arrival and t.slo == s.slo
+    # already-fitting scenarios are returned untouched
+    assert SCENARIOS["chat_burst"].scaled(10_000) is SCENARIOS["chat_burst"]
+
+
+def test_sample_requests_deterministic_and_in_support():
+    s = SCENARIOS["chat_burst"]
+    a = s.sample_requests(16, seed=7)
+    b = s.sample_requests(16, seed=7)
+    assert a == b
+    for t, p, o in a:
+        assert p in s.prompt_lens.support and o in s.output_lens.support
+    times = [t for t, _, _ in a]
+    assert times == sorted(times) and times[0] > 0
+
+
+def test_length_dist_moments():
+    d = LengthDist(((10, 1.0), (30, 3.0)))
+    assert d.mean == pytest.approx(25.0)
+    assert d.quantile(0.2) == 10 and d.quantile(0.9) == 30
+    assert d.scaled(0.5).points == ((5, 1.0), (15, 3.0))
+    with pytest.raises(ValueError):
+        LengthDist(())
+    with pytest.raises(ValueError):
+        LengthDist(((0, 1.0),))
+
+
+def test_arrival_peak_and_processes():
+    import numpy as np
+    for proc in ("poisson", "burst", "diurnal"):
+        a = ArrivalSpec(rate_rps=4.0, process=proc, peak_factor=2.0)
+        gaps = a.interarrivals(32, np.random.default_rng(0))
+        assert len(gaps) == 32 and all(g >= 0 for g in gaps)
+    assert ArrivalSpec(4.0, peak_factor=3.0).peak_rps == 12.0
+    with pytest.raises(ValueError):
+        ArrivalSpec(4.0, process="bogus")
+
+
+# ======================================================================
+# Queueing-bound properties
+# ======================================================================
+def test_rho_ge_one_implies_infeasible():
+    """Drive the arrival rate far past capacity: rho >= 1 at every
+    batch, so deploy-slo-infeasible must fire."""
+    cfg = _cfg()
+    dep = DeploymentSpec(n_slots=4, max_len=64, page_size=8)
+    scen = _scenario(rate=1e9).scaled(64)
+    rep = deploy_preflight(cfg, scen, deployment=dep)
+    assert rep.rho >= 1.0
+    assert "deploy-slo-infeasible" in rule_ids(rep)
+    assert not rep.ok
+
+
+def test_rho_monotone_in_arrival_rate():
+    cfg = _cfg()
+    dep = DeploymentSpec(n_slots=4, max_len=64, page_size=8)
+    rhos = [deploy_preflight(cfg, _scenario(rate=r).scaled(64),
+                             deployment=dep).rho
+            for r in (0.5, 1.0, 2.0, 4.0, 8.0)]
+    assert all(b > a for a, b in zip(rhos, rhos[1:]))
+    # rho is linear in rate at a fixed operating point
+    assert rhos[2] == pytest.approx(4 * rhos[0], rel=1e-6)
+
+
+def test_bounds_monotone_in_prompt_length():
+    """Shifting the prompt support upward (same weights) can only grow
+    utilization and the TTFT lower bound."""
+    cfg = _cfg()
+    dep = DeploymentSpec(n_slots=4, max_len=256, page_size=8)
+    prev_rho, prev_ttft = -1.0, -1.0
+    for base in (8, 32, 64, 128):
+        scen = _scenario(prompts=((base, 1.0), (base + 16, 1.0)))
+        rep = deploy_preflight(cfg, scen, deployment=dep)
+        assert rep.rho >= prev_rho and rep.ttft_lb_ms >= prev_ttft
+        prev_rho, prev_ttft = rep.rho, rep.ttft_lb_ms
+
+
+def test_report_deterministic_across_processes(tmp_path):
+    """The bounds use no RNG and no hash iteration: a fresh interpreter
+    must produce a byte-identical report."""
+    prog = (
+        "import json, sys\n"
+        "from repro.analysis.deploy_lint import DeploymentSpec, "
+        "deploy_preflight\n"
+        "from repro.configs import get_arch, smoke_config\n"
+        "cfg = smoke_config(get_arch('minicpm-2b'))\n"
+        "dep = DeploymentSpec(n_slots=4, max_len=64, page_size=8)\n"
+        "rep = deploy_preflight(cfg, 'chat_burst', deployment=dep)\n"
+        "rep.seconds = 0.0\n"
+        "print(json.dumps(rep.to_json(), sort_keys=True))\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    outs = [subprocess.run([sys.executable, "-c", prog], env=env,
+                           capture_output=True, text=True, timeout=120)
+            for _ in range(2)]
+    for r in outs:
+        assert r.returncode == 0, r.stderr
+    assert outs[0].stdout == outs[1].stdout
+
+
+def test_best_batch_and_lower_bounds_populated():
+    rep = deploy_preflight(_cfg(), "code_completion",
+                           deployment=DeploymentSpec(
+                               n_slots=4, max_len=64, page_size=8))
+    assert 1 <= rep.best_batch <= 4
+    assert rep.tok_p50_lb_ms > 0
+    assert rep.tok_p99_lb_ms >= rep.tok_p50_lb_ms
+    assert rep.ttft_lb_ms > 0 and rep.service_s > 0
+    assert rep.rho_peak >= rep.rho
+
+
+# ======================================================================
+# Rule fixtures: each fires exactly its id
+# ======================================================================
+def test_fixture_admission_deadlock():
+    dep = DeploymentSpec(n_slots=4, max_len=64, page_size=8,
+                         page_budget=3)   # 2 usable pages < any request
+    rep = deploy_preflight(_cfg(), _scenario().scaled(64), deployment=dep)
+    assert rule_ids(rep) == ["deploy-admission-deadlock"]
+    assert rep.findings[0].severity == "error"
+
+
+def test_fixture_bucket_gap_forced_decode():
+    """SSM configs are pad-unsafe: a single tiny bucket chunks nearly
+    every prompt token through decode."""
+    cfg = _cfg("mamba2-1.3b")
+    dep = DeploymentSpec(n_slots=4, max_len=256, page_size=0,
+                         buckets=(8,))
+    scen = _scenario(prompts=((200, 1.0), (240, 1.0)),
+                     outputs=((8, 1.0),))
+    rep = deploy_preflight(cfg, scen, deployment=dep)
+    assert rule_ids(rep) == ["deploy-bucket-gap"]
+    assert rep.findings[0].severity == "warning"
+
+
+def test_fixture_bucket_gap_unserveable_length():
+    scen = _scenario(prompts=((60, 1.0), (64, 1.0)), outputs=((8, 1.0),))
+    rep = deploy_preflight(_cfg(), scen, deployment=DeploymentSpec(
+        n_slots=4, max_len=64, page_size=8))
+    ids = rule_ids(rep)
+    assert ids == ["deploy-bucket-gap"]
+    assert "no plan" in rep.findings[0].message
+
+
+def test_fixture_compile_unbounded_exact_mode():
+    """The small fix: buckets=() over a multi-length scenario reports
+    (info bucket-gap + warning compile-unbounded), never crashes."""
+    dep = DeploymentSpec(n_slots=4, max_len=64, page_size=8, buckets=())
+    rep = deploy_preflight(_cfg(), _scenario().scaled(64), deployment=dep)
+    by_rule = {f.rule_id: f for f in rep.findings}
+    assert set(by_rule) == {"deploy-bucket-gap",
+                            "deploy-compile-unbounded"}
+    assert by_rule["deploy-bucket-gap"].severity == "info"
+    assert by_rule["deploy-compile-unbounded"].severity == "warning"
+    assert rep.compile_bound == 0     # exact mode: unbounded
+    assert rep.ok                     # info/warning never error
+
+
+def test_fixture_slo_infeasible_absurd_slo():
+    scen = _scenario(slo=(0.001, 0.0001, 0.0002))
+    rep = deploy_preflight(_cfg(), scen, deployment=DeploymentSpec(
+        n_slots=4, max_len=64, page_size=8))
+    assert rule_ids(rep) == ["deploy-slo-infeasible"]
+    assert rep.findings[0].severity == "error"
+
+
+def test_fixture_queue_saturation_peak_rate():
+    """Tune the rate so the mean is stable but the 4x burst peak sits
+    past the saturation knee: warning, not error."""
+    cfg = _cfg()
+    dep = DeploymentSpec(n_slots=4, max_len=64, page_size=8)
+    probe = deploy_preflight(cfg, _scenario(rate=1.0).scaled(64),
+                             deployment=dep)
+    rate = 0.5 / probe.rho            # -> rho ~0.5, rho_peak ~2.0
+    scen = _scenario(rate=rate, process="burst", peak=4.0).scaled(64)
+    rep = deploy_preflight(cfg, scen, deployment=dep)
+    assert rule_ids(rep) == ["deploy-queue-saturation"]
+    assert rep.findings[0].severity == "warning"
+    assert rep.rho < 1.0 and rep.rho_peak >= dep.saturation_rho
+    assert rep.ok
+
+
+def test_fixture_capacity_overflow():
+    dep = DeploymentSpec(n_slots=4, max_len=64, page_size=8,
+                         hbm_gb=0.0001)
+    rep = deploy_preflight(_cfg(), _scenario().scaled(64), deployment=dep)
+    assert rule_ids(rep) == ["deploy-capacity-overflow"]
+    assert rep.findings[0].severity == "error"
+
+
+def test_rules_registered():
+    for rid in RULE_IDS:
+        assert rid in RULES
+
+
+def test_deployment_spec_roundtrip():
+    dep = DeploymentSpec(n_slots=2, max_len=128, buckets=(8, 32),
+                         kv_dtypes=("bfloat16", "int8"),
+                         mesh={"data": 2, "model": 4}, hbm_gb=8.0)
+    assert DeploymentSpec.from_json(dep.to_json()) == dep
+
+
+def test_default_deployment_covers_scenario():
+    for s in SCENARIOS.values():
+        dep = default_deployment(s)
+        assert dep.max_len >= s.max_context()
+
+
+def test_mamba_deadlock_rule_skipped_without_attention():
+    """Attention-free configs have no KV pages: an absurd page budget
+    must not fabricate a deadlock."""
+    dep = DeploymentSpec(n_slots=4, max_len=64, page_size=8,
+                         page_budget=2)
+    rep = deploy_preflight(_cfg("mamba2-1.3b"), _scenario().scaled(64),
+                           deployment=dep)
+    assert "deploy-admission-deadlock" not in rule_ids(rep)
+
+
+# ======================================================================
+# Runner / CLI integration (the seeded-fixture acceptance path)
+# ======================================================================
+def test_cli_fixture_fires_exact_rule(tmp_path):
+    fixture = {"cases": [{
+        "arch": "minicpm-2b", "smoke": True, "scenario": "chat_burst",
+        "deployment": {"n_slots": 4, "max_len": 64, "page_size": 8,
+                       "page_budget": 3}}]}
+    fx = tmp_path / "deploy_fixture.json"
+    fx.write_text(json.dumps(fixture))
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               REPRO_ARTIFACT_DIR=str(tmp_path),
+               **{FIXTURE_ENV: str(fx)})
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--rules",
+         "deploy-admission-deadlock"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 1, r.stdout + r.stderr   # error severity
+    payload = json.load(open(tmp_path / "analysis" / "report.json"))
+    assert set(payload["passes"]) == {"deploy_lint"}
+    rids = [f["rule_id"] for f in payload["findings"]]
+    assert rids == ["deploy-admission-deadlock"]
+
+
+def test_cli_deploy_rules_never_import_jax(tmp_path):
+    """The lazy-loading contract: a --rules deploy-* run must finish
+    without jax ever entering sys.modules."""
+    prog = (
+        "import sys\n"
+        "from repro.analysis.runner import run_analysis\n"
+        "rep = run_analysis('ci', rules=('deploy-slo-infeasible',))\n"
+        "assert set(rep.passes) == {'deploy_lint'}, rep.passes\n"
+        "assert 'jax' not in sys.modules, 'deploy_lint imported jax'\n"
+        "print('OK')\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               REPRO_ARTIFACT_DIR=str(tmp_path))
+    r = subprocess.run([sys.executable, "-c", prog], env=env, cwd=REPO,
+                       capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_preflight_under_100ms():
+    """The DSE calls this per candidate point: it must stay cheap."""
+    cfg = _cfg()
+    dep = DeploymentSpec(n_slots=4, max_len=64, page_size=8)
+    scen = SCENARIOS["chat_burst"].scaled(64)
+    deploy_preflight(cfg, scen, deployment=dep)      # warm any caches
+    best = min(_timed(cfg, scen, dep) for _ in range(3))
+    assert best < 0.1, f"deploy_preflight took {best * 1e3:.1f} ms"
+
+
+def _timed(cfg, scen, dep):
+    t0 = time.perf_counter()
+    deploy_preflight(cfg, scen, deployment=dep)
+    return time.perf_counter() - t0
+
+
+def test_clean_tree_deploy_pass_is_green():
+    """The ci preset's smoke configs x the scenario library must stay
+    finding-free — the baseline ratchet depends on it."""
+    from repro.analysis.registry import PRESETS, AnalysisContext
+    from repro.analysis.deploy_lint import run_pass
+    ctx = AnalysisContext(preset=PRESETS["ci"], root=REPO)
+    findings = run_pass(ctx)
+    assert findings == [], [f.describe() for f in findings]
